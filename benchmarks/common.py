@@ -1,0 +1,46 @@
+"""Shared helpers for the per-figure benchmark harnesses."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import metrics, policies
+from repro.core.simulator import SimConfig, simulate
+from repro.core.workload import FaaSBenchConfig, generate
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+# benchmark scale: the paper uses 49,712 (Fig 2) / 10,000 (replay) requests;
+# REPRO_BENCH_N overrides for quick runs.
+N_REQUESTS = int(os.environ.get("REPRO_BENCH_N", "6000"))
+CORES = 12
+
+
+def save(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def run_policy(reqs, policy: str, cores: int = CORES, **kw):
+    t0 = time.time()
+    res = simulate(reqs, policies.make(policy, cores, **kw))
+    return res, time.time() - t0
+
+
+def workload(load: float, *, n: int = None, iat: str = "poisson",
+             seed: int = 7, **kw) -> list:
+    return generate(FaaSBenchConfig(n_requests=n or N_REQUESTS, cores=CORES,
+                                    load=load, iat=iat, seed=seed, **kw))
+
+
+def dist_stats(x: np.ndarray) -> dict:
+    return {"mean": float(np.mean(x)), "p50": float(np.percentile(x, 50)),
+            "p90": float(np.percentile(x, 90)),
+            "p99": float(np.percentile(x, 99)),
+            "p999": float(np.percentile(x, 99.9))}

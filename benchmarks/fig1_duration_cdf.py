@@ -1,0 +1,62 @@
+"""Fig. 1 — CDF of Azure Functions average execution duration.
+
+Validates the workload generator's duration marginal against the paper's
+stated quantiles: ~37.2% < 300 ms, ~57.2% < 1 s, 99.9% < 224 s (raw-tail
+table), and Table I's bucket masses for the benchmark (fib-capped) table.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save
+from repro.core.workload import (AZURE_TABLE_I, AZURE_TABLE_I_RAW_TAIL,
+                                 FaaSBenchConfig, generate)
+
+
+def run(n: int = 50_000) -> dict:
+    out = {}
+    for name, table in [("benchmark", AZURE_TABLE_I),
+                        ("raw_tail", AZURE_TABLE_I_RAW_TAIL)]:
+        reqs = generate(FaaSBenchConfig(n_requests=n, duration_table=table,
+                                        seed=1))
+        d = np.array([r.service for r in reqs])
+        out[name] = {
+            "frac_lt_50ms": float((d < 0.05).mean()),
+            "frac_lt_300ms": float((d < 0.3).mean()),
+            "frac_lt_1s": float((d < 1.0).mean()),
+            "frac_lt_224s": float((d < 224.0).mean()),
+            "max_s": float(d.max()),
+            "mean_s": float(d.mean()),
+        }
+    # NOTE: Fig. 1's quantiles (37.2% < 300 ms, 57.2% < 1 s) weight each
+    # unique FUNCTION once; the generated stream weights INVOCATIONS per
+    # Table I (short functions are invoked more often), so the directly
+    # checkable targets are the Table-I bucket masses:
+    reqs = generate(FaaSBenchConfig(n_requests=n, seed=1))
+    d = np.array([r.service for r in reqs])
+    edges = [(0.0, 0.05, 0.406), (0.05, 0.1, 0.098), (0.1, 0.2, 0.068),
+             (0.2, 0.4, 0.227), (1.55, 100.0, 0.157)]
+    out["table_I_masses"] = {
+        f"[{lo*1000:.0f},{hi*1000:.0f})ms": {
+            "target": tgt, "got": float(((d >= lo) & (d < hi)).mean())}
+        for lo, hi, tgt in edges}
+    out["paper_fig1_note"] = ("Fig.1 is function-weighted; the stream is "
+                              "invocation-weighted per Table I")
+    save("fig1_duration_cdf", out)
+    return out
+
+
+def main():
+    out = run()
+    b = out["benchmark"]
+    print(f"benchmark table: <300ms {b['frac_lt_300ms']:.3f} "
+          f"<1s {b['frac_lt_1s']:.3f} mean {b['mean_s']:.3f}s "
+          f"max {b['max_s']:.1f}s")
+    r = out["raw_tail"]
+    print(f"raw-tail table:  <300ms {r['frac_lt_300ms']:.3f} "
+          f"<1s {r['frac_lt_1s']:.3f} <224s {r['frac_lt_224s']:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.roofline import analyze
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str, variant: str = "baseline"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(p))
+        if "skipped" in r:
+            continue
+        if r.get("mesh") == mesh and r.get("variant", "baseline") == variant:
+            rows.append(r)
+    return rows
+
+
+def dryrun_table() -> str:
+    out = ["| arch | shape | mesh | compile s | peak GiB/dev | "
+           "collectives/dev (fit-HLO) |", "|---|---|---|---|---|---|"]
+    for mesh in ("pod16x16", "pod2x16x16"):
+        for r in load(mesh):
+            m = r["memory"]
+            c = r["collectives"]
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | "
+                f"{r['compile_s']} | {m['peak_device_bytes']/2**30:.2f} | "
+                f"{c['n_collectives']} ops, "
+                f"{c['wire_bytes_per_device']/2**30:.2f} GiB |")
+    return "\n".join(out)
+
+
+def roofline_table(variant: str = "baseline") -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | roofline frac | MODEL/HLO | peak GiB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in load("pod16x16", variant):
+        a = analyze(r)
+        out.append(
+            f"| {a['arch']} | {a['shape']} | {a['compute_s']:.3f} | "
+            f"{a['memory_s']:.3f} | {a['collective_s']:.3f} | "
+            f"{a['dominant']} | {a['roofline_fraction']:.2f} | "
+            f"{a['useful_ratio']:.2f} | {a['peak_device_gib']:.1f} | "
+            f"{'yes' if a['fits_16gib'] else 'NO'} |")
+    return "\n".join(out)
+
+
+def variant_compare(arch: str, shape: str, variants: list[str]) -> str:
+    out = [f"**{arch} x {shape}**", "",
+           "| variant | compute s | memory s | collective s | peak GiB |",
+           "|---|---|---|---|---|"]
+    for v in variants:
+        suffix = "" if v == "baseline" else f"__{v}"
+        p = os.path.join(ART, f"{arch}__{shape}__pod16x16{suffix}.json")
+        if not os.path.exists(p):
+            out.append(f"| {v} | (missing) | | | |")
+            continue
+        r = json.load(open(p))
+        a = analyze(r)
+        out.append(f"| {v} | {a['compute_s']:.3f} | {a['memory_s']:.3f} | "
+                   f"{a['collective_s']:.3f} | {a['peak_device_gib']:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run matrix\n")
+    print(dryrun_table())
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table())

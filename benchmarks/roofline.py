@@ -1,0 +1,119 @@
+"""§Roofline — the three-term roofline model per (arch x shape), derived
+from the dry-run's compiled artifacts (single-pod mesh).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = collective_wire_bytes_per_device / ICI_link_bandwidth
+
+FLOPs/bytes come from the dry-run's unrolled-probe extrapolation (XLA's
+cost analysis counts scan bodies once; see launch/dryrun.py).  The
+dominant term is the bottleneck; "roofline fraction" is
+compute_term / max(all terms) — the fraction of peak FLOP/s the step
+would sustain if the dominant term fully serialized (a pessimistic,
+overlap-free bound).
+
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = params (active for
+MoE), D = tokens — the useful-work yardstick; MODEL/HLO catches remat and
+padding waste.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save
+from repro.configs import SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+
+
+def model_flops(rec: dict) -> float:
+    sh = SHAPES[rec["shape"]]
+    n = rec["config"]["params_active"]
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * n * tokens
+    if sh.kind == "prefill":
+        tokens = sh.seq_len * sh.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * sh.global_batch            # decode: one token/seq
+
+
+def analyze(rec: dict) -> dict:
+    ce = rec.get("cost_extrapolated") or {}
+    flops_dev = ce.get("flops_per_device",
+                       rec["cost"]["flops_per_device"])
+    bytes_dev = ce.get("bytes_per_device",
+                       rec["cost"]["bytes_per_device"])
+    wire_dev = ce.get("collective_wire_bytes_per_device",
+                      rec["collectives"]["wire_bytes_per_device"])
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_x = wire_dev / ICI_BW
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = flops_dev * rec["n_devices"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "variant": rec.get("variant", "baseline"),
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "roofline_fraction": t_c / max(max(terms.values()), 1e-30),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / max(hlo_global, 1e-30),
+        "peak_device_gib": rec["memory"]["peak_device_bytes"] / 2**30,
+        "fits_16gib": rec["memory"]["peak_device_bytes"] < 16 * 2**30,
+    }
+
+
+def run(variant: str = "baseline", mesh: str = "pod16x16") -> dict:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, "*.json"))):
+        rec = json.load(open(path))
+        if "skipped" in rec or rec.get("mesh") != mesh:
+            continue
+        if rec.get("variant", "baseline") != variant:
+            continue
+        rows.append(analyze(rec))
+    out = {"hardware": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                        "ici_bw": ICI_BW},
+           "rows": rows}
+    save(f"roofline_{variant}", out)
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    return (f"{r['arch']:18s} {r['shape']:12s} "
+            f"C {r['compute_s']*1e3:9.2f}ms  M {r['memory_s']*1e3:9.2f}ms  "
+            f"X {r['collective_s']*1e3:9.2f}ms  -> {r['dominant']:10s} "
+            f"RF {r['roofline_fraction']:5.2f}  "
+            f"useful {r['useful_ratio']:5.2f}  "
+            f"mem {r['peak_device_gib']:5.1f}GiB"
+            f"{'' if r['fits_16gib'] else ' OVER'}")
+
+
+def main():
+    out = run()
+    print(f"{len(out['rows'])} cells (single-pod):")
+    for r in out["rows"]:
+        print(fmt_row(r))
+    if out["rows"]:
+        doms = [r["dominant"] for r in out["rows"]]
+        print("\nbottleneck census:",
+              {d: doms.count(d) for d in set(doms)})
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark aggregator: one harness per paper table/figure + the serving
+engine e2e + the roofline table (from dry-run artifacts, if present).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig2 fig6  # subset
+  REPRO_BENCH_N=49712 ... runs at the paper's request count.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (fig1_duration_cdf, fig2_policies, fig6_7_load_sweep,
+                        fig9_10_timeslice, fig11_io, fig12_overload,
+                        roofline, serving_e2e, table2_overhead)
+
+SUITES = {
+    "fig1": fig1_duration_cdf,
+    "fig2": fig2_policies,
+    "fig6": fig6_7_load_sweep,
+    "fig9": fig9_10_timeslice,
+    "fig11": fig11_io,
+    "fig12": fig12_overload,
+    "table2": table2_overhead,
+    "serving": serving_e2e,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    names = [a for a in sys.argv[1:] if not a.startswith("-")] or \
+        list(SUITES)
+    for name in names:
+        mod = SUITES[name]
+        print(f"\n===== {name}: {mod.__doc__.splitlines()[0]}")
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception as e:                     # keep the suite running
+            print(f"  !! {name} failed: {e!r}")
+        print(f"  ({time.time() - t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

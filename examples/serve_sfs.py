@@ -1,0 +1,47 @@
+"""End-to-end driver: serve a real (reduced) qwen2.5 model with batched
+requests through the SFS-scheduled continuous-batching engine, and compare
+against CFS lanes on the same stream.
+
+Every tick executes a real jitted ``decode_step`` on CPU; prefills build
+real KV caches.  This is deliverable (b)'s serving driver.
+
+  PYTHONPATH=src python examples/serve_sfs.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import transformer as T
+from repro.serving import Engine, EngineConfig, Request, summarize
+
+print(__doc__)
+cfg = get_reduced("qwen2.5-3b")
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(7)
+
+N, LANES = 40, 4
+svc = np.where(rng.random(N) < 0.8, rng.integers(2, 8, N),
+               rng.integers(30, 60, N))
+span = svc.sum() / LANES
+arr = np.sort(rng.uniform(0, span, N)).astype(int)
+prompts = {i: rng.integers(0, cfg.vocab, 8) for i in range(N)}
+
+for policy in ["sfs", "cfs"]:
+    wl = [Request(rid=i, arrival=int(arr[i]), prompt_len=8,
+                  n_tokens=int(svc[i])) for i in range(N)]
+    eng = Engine(EngineConfig(lanes=LANES, n_slots=16, max_len=96,
+                              policy=policy,
+                              sched_kw={"adaptive_window": 10}
+                              if policy == "sfs" else {}),
+                 model_cfg=cfg, params=params)
+    t0 = time.time()
+    done = eng.run(wl, prompts=prompts, max_ticks=100_000)
+    s = summarize(done)
+    print(f"{policy:4s}: {s['n']} requests in {eng.t} ticks "
+          f"({time.time()-t0:.1f}s wall) | median TA {s['median_turnaround']:.0f} "
+          f"ticks | RTE>=0.95 {s['frac_rte_095']*100:.0f}% | "
+          f"lane switches {s['total_ctx']}")
+print("\nshort requests finish in ~their own decode length under SFS; "
+      "CFS time-slices everyone and short requests queue behind long ones.")

@@ -1,0 +1,30 @@
+"""llama3-405b [dense] — GQA (kv=8), 128k vocab.  [arXiv:2407.21783]
+
+The largest assigned arch: 2-D sharded (model x fsdp-over-data), Adafactor
+(factored second moment, beta1=0) so optimizer state fits 16 GB/chip HBM,
+16 grad-accumulation microbatches for the 1M-token train_4k step.
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llama3-405b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="dense",
+        n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, head_dim=128,
+        d_ff=53248, vocab=128256,
+        rope_theta=500_000.0,
+        fsdp=True, optimizer="adafactor", microbatch=16, grad_accum="fused",
+        q_chunk=1024, kv_chunk=1024,
+        # 2.16 TB of bf16 KV at decode_32k cannot fit 256 chips alongside
+        # params; int8 cache (per-token-head scales) is the serving config
+        kv_cache_dtype="int8",
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=8, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, microbatch=2, q_chunk=16, kv_chunk=16,
+        kv_cache_dtype="bfloat16")

@@ -1,0 +1,32 @@
+"""llava-next-34b [vlm] — decoder backbone with anyres vision-prefix stub.
+[hf:llava-hf/llava-v1.6-*]
+
+The assignment specifies the transformer BACKBONE only; the vision tower is
+a stub — ``input_specs()`` supplies precomputed patch embeddings for the
+first ``n_prefix`` positions (576 = one 24x24 base tile; anyres adds tiles,
+which only changes n_prefix).
+
+Note: 56 heads is not divisible by the 16-way model axis; GSPMD shards
+uneven dims by internal padding (documented in DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+ARCH_ID = "llava-next-34b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="vlm",
+        n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+        d_ff=20480, vocab=64000,
+        rope_theta=5_000_000.0, n_prefix=576,
+        fsdp=True, microbatch=4,
+        kv_cache_dtype="int8",   # 60L x 8kv x 128hd x 32k x 128B cache
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, n_prefix=8, microbatch=1,
+        q_chunk=16, kv_chunk=16, kv_cache_dtype="bfloat16")

@@ -1,0 +1,24 @@
+"""mamba2-1.3b [ssm] — attention-free, SSD (state-space duality).
+[arXiv:2405.21060]"""
+from repro.models.config import ModelConfig
+from repro.models.mamba2 import SSMConfig
+
+ARCH_ID = "mamba2-1.3b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="ssm",
+        n_layers=48, d_model=2048, vocab=50280,
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2),
+        microbatch=2,
+        # mamba in_proj/conv params replicate over 'model' (unaligned fused
+        # dims) — ZeRO-3 over 'data' shards their optimizer state instead
+        fsdp=True,
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=64, vocab=512,
+        ssm=SSMConfig(d_state=16, head_dim=8, chunk=16))

@@ -1,0 +1,24 @@
+"""qwen3-moe-30b-a3b [moe] — 128 experts top-8, fine-grained (d_ff=768).
+[hf:Qwen/Qwen3-30B-A3B]"""
+from repro.models.config import ModelConfig
+from repro.models.moe import MoEConfig
+
+ARCH_ID = "qwen3-moe-30b-a3b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID, family="moe",
+        n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, head_dim=128,
+        d_ff=0, vocab=151936,
+        rope_theta=1_000_000.0,
+        moe=MoEConfig(n_experts=128, top_k=8, d_ff_expert=768),
+        fsdp=True, microbatch=2,
+    )
+
+
+def reduced() -> ModelConfig:
+    return full().replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32),
+        microbatch=1, q_chunk=16, kv_chunk=16)

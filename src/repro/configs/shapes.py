@@ -1,0 +1,103 @@
+"""Assigned input shapes and per-cell input specs (ShapeDtypeStruct only).
+
+The four LM shapes (seq_len x global_batch):
+  train_4k     4,096 x 256   -> lowers ``train_step``
+  prefill_32k  32,768 x 32   -> lowers ``prefill_step`` (encode for audio)
+  decode_32k   32,768 x 128  -> lowers ``serve_step`` (1 token, full cache)
+  long_500k    524,288 x 1   -> ``serve_step``; SSM/hybrid only (sub-quadratic)
+
+Skips (documented in DESIGN.md §Arch-applicability):
+  * encoder-only (hubert) has no decode step -> decode_32k/long_500k skipped
+  * pure full-attention archs skip long_500k (quadratic prefill)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    sh = SHAPES[shape_name]
+    if sh.kind == "decode" and not cfg.has_decode:
+        return False, "encoder-only arch has no decode step"
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "pure full-attention arch; 500k decode needs sub-quadratic state"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                batch_override: int | None = None,
+                seq_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    No device allocation — safe for the 512-device dry-run.
+    """
+    sh = SHAPES[shape_name]
+    B = batch_override or sh.global_batch
+    S = seq_override or sh.seq_len
+    tok = jnp.int32
+
+    if sh.kind == "train":
+        if cfg.family == "audio":
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                    "labels": _sds((B, S), tok)}
+        batch = {"tokens": _sds((B, S), tok), "labels": _sds((B, S), tok)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.n_prefix, cfg.d_model),
+                                          jnp.bfloat16)
+        return batch
+
+    if sh.kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16)}
+        batch = {"tokens": _sds((B, S), tok)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds((B, cfg.n_prefix, cfg.d_model),
+                                          jnp.bfloat16)
+        return batch
+
+    # decode: a cache filled to S plus one new token per sequence
+    cache = jax.eval_shape(partial(T.init_cache, cfg, B, S))
+    return {"cache": cache, "tokens": _sds((B,), tok)}
+
+
+def plan_rule_overrides(cfg: ModelConfig, shape_name: str) -> dict:
+    """Per-cell logical-axis rule tweaks (see repro.sharding.plan)."""
+    sh = SHAPES[shape_name]
+    rules: dict = {}
+    if sh.global_batch == 1:
+        # long_500k: batch of 1 cannot shard over data — replicate batch,
+        # the decode state shards over heads ("model") instead.
+        rules["batch"] = None
+    if sh.kind in ("train", "prefill"):
+        # sequence parallelism: the residual stream shards its seq dim over
+        # the model axis (Megatron-SP); attention/MLP re-gather per block.
+        # Without this the per-device residual carries under remat are
+        # replicated 16x over "model" and blow the 16 GB HBM budget.
+        rules["seq"] = "model"
+    return rules

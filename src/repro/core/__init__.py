@@ -1,0 +1,14 @@
+"""repro.core — the paper's contribution: SFS two-level scheduling.
+
+Public API:
+  workload.FaaSBenchConfig / generate  — FaaSBench (§VII)
+  simulator.SimConfig / simulate       — discrete-event multicore simulator
+  policies.{sfs,cfs,fifo,rr,srtf,ideal} — policy constructors
+  metrics                              — RTE / turnaround / headline stats
+"""
+from repro.core.workload import FaaSBenchConfig, Request, generate
+from repro.core.simulator import SimConfig, SimResult, JobStats, simulate
+from repro.core import policies, metrics
+
+__all__ = ["FaaSBenchConfig", "Request", "generate", "SimConfig",
+           "SimResult", "JobStats", "simulate", "policies", "metrics"]

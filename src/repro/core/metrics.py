@@ -1,0 +1,79 @@
+"""Metrics for scheduler evaluation: RTE, percentiles, paper headline stats."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.simulator import SimResult
+
+
+def turnarounds(res: SimResult) -> np.ndarray:
+    return np.array([s.turnaround for s in res.stats])
+
+
+def rtes(res: SimResult) -> np.ndarray:
+    return np.array([s.rte for s in res.stats])
+
+
+def percentiles(x: np.ndarray, ps=(50, 90, 99, 99.9)) -> dict:
+    return {p: float(np.percentile(x, p)) for p in ps}
+
+
+def cdf(x: np.ndarray, n: int = 200):
+    """(xs, ys) suitable for plotting/inspection."""
+    xs = np.sort(x)
+    ys = np.arange(1, len(xs) + 1) / len(xs)
+    idx = np.linspace(0, len(xs) - 1, min(n, len(xs))).astype(int)
+    return xs[idx], ys[idx]
+
+
+def frac_rte_below(res: SimResult, thr: float) -> float:
+    r = rtes(res)
+    return float((r < thr).mean())
+
+
+def frac_rte_atleast(res: SimResult, thr: float) -> float:
+    r = rtes(res)
+    return float((r >= thr).mean())
+
+
+@dataclasses.dataclass
+class HeadlineComparison:
+    """The paper's headline claim format (§I): vs a baseline, the fraction of
+    functions improved, their mean speedup, and the slowdown of the rest."""
+    frac_improved: float
+    mean_speedup_improved: float      # arithmetic mean, as in the paper
+    geomean_speedup_improved: float
+    frac_regressed: float
+    mean_slowdown_regressed: float
+
+
+def compare(treat: SimResult, base: SimResult,
+            tol: float = 1.0) -> HeadlineComparison:
+    """Per-request turnaround of ``treat`` (e.g. SFS) vs ``base`` (e.g. CFS)."""
+    t = turnarounds(treat)
+    b = turnarounds(base)
+    assert len(t) == len(b)
+    ratio = b / np.maximum(t, 1e-12)          # >1 => treat faster
+    improved = ratio > tol
+    regressed = ~improved
+    sp = ratio[improved]
+    sl = (1.0 / ratio)[regressed]
+    return HeadlineComparison(
+        frac_improved=float(improved.mean()),
+        mean_speedup_improved=float(sp.mean()) if sp.size else 1.0,
+        geomean_speedup_improved=float(np.exp(np.log(sp).mean()))
+        if sp.size else 1.0,
+        frac_regressed=float(regressed.mean()),
+        mean_slowdown_regressed=float(sl.mean()) if sl.size else 1.0,
+    )
+
+
+def mean_turnaround(res: SimResult) -> float:
+    return float(turnarounds(res).mean())
+
+
+def median_turnaround(res: SimResult) -> float:
+    return float(np.median(turnarounds(res)))

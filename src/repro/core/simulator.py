@@ -1,0 +1,582 @@
+"""Discrete-event multicore scheduling simulator.
+
+This is the *faithful-reproduction* half of the repo: it models a host OS
+scheduling function processes on ``c`` cores, exactly as measured in the
+paper's standalone-SFS evaluation (§VIII), and implements:
+
+* ``cfs``   — Linux CFS emulation: single runqueue ordered by vruntime,
+              per-dispatch slice = max(sched_latency / nr_runnable,
+              min_granularity), vruntime does not tick while waiting.
+* ``fifo``  — SCHED_FIFO: run-to-completion, blocked tasks re-enter at the
+              queue tail on wake (convoy effect).
+* ``rr``    — SCHED_RR: fixed quantum, expired tasks re-enter at the tail.
+* ``srtf``  — offline oracle: preemptive Shortest Remaining Time First.
+* ``ideal`` — infinite resources, zero contention (analytic).
+* ``sfs``   — the paper's two-level scheduler: a FILTER pool (FIFO-like,
+              high priority, dynamically-adapted time slice S) concatenated
+              with CFS for demoted (long) functions; I/O-aware polling;
+              transient-overload bypass (§V-B..E).
+
+Design notes / simplifications (documented in DESIGN.md):
+* All tasks share one priority/weight (FaaS functions are peers).
+* The CFS runqueue is global (the paper's own argument for a single queue);
+  per-core runqueues + load balancing converge to this in steady state.
+* In the io-*oblivious* SFS ablation the held core does not run CFS during
+  the sleep (the kernel would sneak CFS in); this only strengthens the
+  paper's Fig.-11 conclusion and affects no other experiment.
+* Context switches counted are involuntary (preemption/demotion/quantum).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Optional
+
+from repro.core.workload import Request
+
+_EPS = 1e-12
+_INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Config & results
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimConfig:
+    cores: int = 12
+    policy: str = "sfs"               # sfs | cfs | fifo | rr | srtf | ideal
+    # --- FILTER (SFS) ---
+    slice_s: Optional[float] = None   # fixed S; None => adaptive (paper §V-C)
+    adaptive_window: int = 100        # N
+    slice_init_s: float = 0.1         # S before the first window closes
+    overload_factor: Optional[float] = 3.0   # O; None disables §V-E bypass
+    io_aware: bool = True             # §V-D polling on/off
+    poll_interval_s: float = 0.004    # 4 ms
+    # --- RR ---
+    rr_quantum_s: float = 0.100       # Linux SCHED_RR default
+    # --- CFS ---
+    cfs_latency_s: float = 0.024      # sched_latency
+    cfs_min_gran_s: float = 0.003     # min_granularity
+    # --- misc ---
+    # Dead time a core pays when it starts running a job it wasn't already
+    # running (direct switch cost + cache/TLB pollution; ~100 us is typical
+    # for container-heavy hosts).  At rho = 1 this is what makes workload-
+    # oblivious fine-slicing (CFS/RR) collapse: effective load exceeds 1 and
+    # the backlog grows without bound, while SFS's run-to-completion FILTER
+    # keeps the switch rate (and thus effective load) near the offered load.
+    ctx_switch_cost_s: float = 100e-6
+
+
+@dataclasses.dataclass
+class JobStats:
+    rid: int
+    arrival: float
+    service: float
+    io_total: float
+    finish: float
+    n_ctx: int
+    demoted: bool
+    queue_delay: float                # total time spent in the global queue
+
+    @property
+    def turnaround(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def rte(self) -> float:
+        """Run-Time Effectiveness (Eq. 1): service time / turnaround."""
+        return self.service / max(self.turnaround, _EPS)
+
+    @property
+    def slowdown(self) -> float:
+        """Turnaround normalized by the IDEAL (zero-contention) turnaround."""
+        return self.turnaround / max(self.service + self.io_total, _EPS)
+
+
+@dataclasses.dataclass
+class SimResult:
+    stats: list                       # list[JobStats], rid order
+    busy_time: float                  # total core-busy seconds
+    makespan: float
+    n_ctx_total: int
+    queue_delay_timeline: list        # [(arrival, queue_delay)] for Fig. 12
+    slice_timeline: list              # [(time, S)] adaptive-S trace, Fig. 10
+
+
+# ---------------------------------------------------------------------------
+# Runtime job state
+# ---------------------------------------------------------------------------
+
+
+class _Job:
+    __slots__ = ("req", "cpu_done", "io_idx", "slice_left", "vruntime",
+                 "finish", "n_ctx", "demoted", "queue_enter", "queue_delay",
+                 "io_wake")
+
+    def __init__(self, req: Request):
+        self.req = req
+        self.cpu_done = 0.0
+        self.io_idx = 0
+        self.slice_left: Optional[float] = None
+        self.vruntime = 0.0
+        self.finish: Optional[float] = None
+        self.n_ctx = 0
+        self.demoted = False
+        self.queue_enter: Optional[float] = None
+        self.queue_delay = 0.0
+        self.io_wake = 0.0
+
+    # -- CPU-demand helpers ------------------------------------------------
+    def to_completion(self) -> float:
+        return self.req.service - self.cpu_done
+
+    def to_next_io(self) -> float:
+        if self.io_idx < len(self.req.io_events):
+            return self.req.io_events[self.io_idx][0] - self.cpu_done
+        return _INF
+
+    def next_io_dur(self) -> float:
+        return self.req.io_events[self.io_idx][1]
+
+    def remaining(self) -> float:
+        return self.req.service - self.cpu_done
+
+
+class _Core:
+    __slots__ = ("idx", "state", "job", "token", "seg_start", "last_rid")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.state = "idle"           # idle | filter | cfs | held
+        self.job: Optional[_Job] = None
+        self.token = 0
+        self.seg_start = 0.0
+        self.last_rid = -1            # for switch-in cost accounting
+
+
+# ---------------------------------------------------------------------------
+# The simulator
+# ---------------------------------------------------------------------------
+
+
+class Simulator:
+    def __init__(self, requests, cfg: SimConfig):
+        self.reqs = list(requests)
+        self.cfg = cfg
+        self.now = 0.0
+        self._seq = 0
+        self.events: list = []
+        self.cores = [_Core(i) for i in range(cfg.cores)]
+        self.global_queue: deque = deque()          # FILTER/FIFO/RR queue
+        self.cfs_rq: list = []                      # heap (vruntime, seq, job)
+        self.cfs_min_vruntime = 0.0
+        self.jobs: dict[int, _Job] = {}
+        self.busy_time = 0.0
+        self.n_ctx_total = 0
+        self.finished = 0
+        # adaptive slice state
+        self.S = cfg.slice_s if cfg.slice_s is not None else cfg.slice_init_s
+        self._iat_window: deque = deque(maxlen=cfg.adaptive_window)
+        self._last_arrival: Optional[float] = None
+        self._arrivals_since_update = 0
+        self.slice_timeline: list = [(0.0, self.S)]
+
+    # -- event plumbing -----------------------------------------------------
+    def _push(self, t: float, kind: str, *data):
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, data))
+
+    # -- public entry ---------------------------------------------------------
+    def run(self) -> SimResult:
+        if self.cfg.policy == "ideal":
+            return self._run_ideal()
+        if self.cfg.policy == "srtf":
+            return self._run_srtf()
+        for r in self.reqs:
+            self._push(r.arrival, "arrival", r)
+        while self.events:
+            self.now, _, kind, data = heapq.heappop(self.events)
+            getattr(self, "_ev_" + kind)(*data)
+        return self._result()
+
+    # ------------------------------------------------------------------
+    # IDEAL: infinite resources, zero contention
+    # ------------------------------------------------------------------
+    def _run_ideal(self) -> SimResult:
+        stats = []
+        for r in self.reqs:
+            fin = r.arrival + r.ideal_turnaround
+            stats.append(JobStats(r.rid, r.arrival, r.service, r.total_io,
+                                  fin, 0, False, 0.0))
+        mk = max(s.finish for s in stats) if stats else 0.0
+        return SimResult(stats, sum(r.service for r in self.reqs), mk, 0,
+                         [], [])
+
+    # ------------------------------------------------------------------
+    # SRTF oracle: preemptive shortest-remaining-first on c cores
+    # ------------------------------------------------------------------
+    def _run_srtf(self) -> SimResult:
+        for r in self.reqs:
+            self._push(r.arrival, "s_arrival", r)
+        self.srtf_wait: list = []        # heap (remaining, seq, job)
+        while self.events:
+            self.now, _, kind, data = heapq.heappop(self.events)
+            getattr(self, "_ev_" + kind)(*data)
+        return self._result()
+
+    def _srtf_admit(self, job: _Job):
+        """Place a runnable job: idle core, else preempt the worst, else wait."""
+        idle = next((c for c in self.cores if c.state == "idle"), None)
+        if idle is not None:
+            self._srtf_start(idle, job)
+            return
+        worst = max((c for c in self.cores if c.job is not None),
+                    key=lambda c: self._srtf_live_remaining(c), default=None)
+        if worst is not None and \
+                self._srtf_live_remaining(worst) > job.remaining() + _EPS:
+            pre = self._srtf_preempt(worst)
+            pre.n_ctx += 1
+            self.n_ctx_total += 1
+            self._seq += 1
+            heapq.heappush(self.srtf_wait, (pre.remaining(), self._seq, pre))
+            self._srtf_start(worst, job)
+        else:
+            self._seq += 1
+            heapq.heappush(self.srtf_wait, (job.remaining(), self._seq, job))
+
+    def _srtf_live_remaining(self, core: _Core) -> float:
+        return core.job.remaining() - max(self.now - core.seg_start, 0.0)
+
+    def _srtf_preempt(self, core: _Core) -> _Job:
+        job = core.job
+        used = max(self.now - core.seg_start, 0.0)
+        job.cpu_done += used
+        self.busy_time += used
+        core.token += 1
+        core.job, core.state = None, "idle"
+        return job
+
+    def _srtf_start(self, core: _Core, job: _Job):
+        cost = self.cfg.ctx_switch_cost_s if core.last_rid != job.req.rid \
+            else 0.0
+        core.last_rid = job.req.rid
+        start = self.now + cost
+        core.job, core.state, core.seg_start = job, "cfs", start
+        core.token += 1
+        seg = min(job.to_completion(), job.to_next_io())
+        self._push(start + max(seg, 0.0), "s_seg_end", core.idx, core.token)
+
+    def _ev_s_arrival(self, req: Request):
+        job = _Job(req)
+        self.jobs[req.rid] = job
+        self._srtf_admit(job)
+
+    def _ev_s_seg_end(self, core_idx: int, token: int):
+        core = self.cores[core_idx]
+        if core.token != token or core.job is None:
+            return
+        job = self._srtf_preempt(core)   # accounts cpu, frees core
+        if job.to_completion() <= _EPS:
+            job.finish = self.now
+            self.finished += 1
+        elif job.to_next_io() <= _EPS:
+            dur = job.next_io_dur()
+            job.io_idx += 1
+            self._push(self.now + dur, "s_io_done", job.req.rid)
+        # pull next waiter onto the freed core
+        if self.srtf_wait and core.state == "idle":
+            _, _, nxt = heapq.heappop(self.srtf_wait)
+            self._srtf_start(core, nxt)
+
+    def _ev_s_io_done(self, rid: int):
+        self._srtf_admit(self.jobs[rid])
+
+    # ------------------------------------------------------------------
+    # Unified FILTER/CFS machinery (sfs, cfs, fifo, rr)
+    # ------------------------------------------------------------------
+
+    # -- arrivals ------------------------------------------------------
+    def _ev_arrival(self, req: Request):
+        job = _Job(req)
+        self.jobs[req.rid] = job
+        self._observe_arrival(req.arrival)
+        if self.cfg.policy == "cfs":
+            self._cfs_enqueue(job)
+            self._dispatch(self.now)
+        else:
+            self._enqueue_global(job)
+            self._dispatch(self.now)
+
+    def _observe_arrival(self, t: float):
+        if self.cfg.policy != "sfs" or self.cfg.slice_s is not None:
+            return
+        if self._last_arrival is not None:
+            self._iat_window.append(t - self._last_arrival)
+        self._last_arrival = t
+        self._arrivals_since_update += 1
+        if (self._arrivals_since_update >= self.cfg.adaptive_window
+                and len(self._iat_window) == self.cfg.adaptive_window):
+            mean_iat = sum(self._iat_window) / len(self._iat_window)
+            self.S = mean_iat * self.cfg.cores          # S = mean(IAT) * c
+            self._arrivals_since_update = 0
+            self.slice_timeline.append((t, self.S))
+
+    def _enqueue_global(self, job: _Job):
+        job.queue_enter = self.now
+        self.global_queue.append(job)
+
+    # -- central dispatch: keep all cores busy per the two-level policy --
+    def _dispatch(self, now: float):
+        # 1) FILTER jobs claim cores (idle first, then preempt CFS tasks).
+        while self.global_queue:
+            core = next((c for c in self.cores if c.state == "idle"), None)
+            if core is None:
+                core = next((c for c in self.cores if c.state == "cfs"), None)
+            if core is None:
+                break
+            job = self.global_queue.popleft()
+            job.queue_delay += now - job.queue_enter
+            # §V-E transient-overload bypass: long queuing delay => CFS.
+            if (self.cfg.policy == "sfs"
+                    and self.cfg.overload_factor is not None
+                    and now - job.queue_enter
+                    >= self.cfg.overload_factor * self.S):
+                self._cfs_enqueue(job)
+                continue
+            if core.state == "cfs":
+                self._cfs_preempt(core)
+            self._filter_start(core, job)
+        # 2) remaining idle cores run CFS.
+        for core in self.cores:
+            if core.state == "idle" and self.cfs_rq:
+                self._cfs_start(core)
+
+    # -- FILTER pool ----------------------------------------------------
+    def _filter_start(self, core: _Core, job: _Job):
+        if job.slice_left is None or self.cfg.policy == "rr":
+            job.slice_left = (self.cfg.rr_quantum_s
+                              if self.cfg.policy == "rr" else self.S)
+        if self.cfg.policy == "fifo":
+            job.slice_left = _INF
+        # switch-in cost: dead time before the job's CPU burst resumes
+        cost = self.cfg.ctx_switch_cost_s if core.last_rid != job.req.rid \
+            else 0.0
+        core.last_rid = job.req.rid
+        start = self.now + cost
+        core.job, core.state, core.seg_start = job, "filter", start
+        core.token += 1
+        seg = min(job.slice_left, job.to_completion(), job.to_next_io())
+        seg = max(seg, 0.0)
+        if job.to_next_io() <= seg + _EPS and job.to_next_io() < _INF \
+                and job.to_next_io() <= min(job.slice_left,
+                                            job.to_completion()) + _EPS:
+            # segment will end by blocking on I/O
+            t_block = start + job.to_next_io()
+            if self.cfg.io_aware:
+                # user-space polling detects the sleep at the next poll tick
+                p = self.cfg.poll_interval_s
+                detect = (math.ceil((t_block - self.now) / p) * p
+                          if p > 0 else t_block - self.now)
+                self._push(max(self.now + detect, t_block), "f_io_detect",
+                           core.idx, core.token, t_block)
+            else:
+                self._push(t_block, "f_obliv_block", core.idx, core.token)
+        else:
+            self._push(start + seg, "f_seg_end", core.idx, core.token)
+
+    def _filter_release(self, core: _Core, used_cpu: float):
+        job = core.job
+        job.cpu_done += used_cpu
+        if job.slice_left is not None and job.slice_left < _INF:
+            job.slice_left -= used_cpu
+        self.busy_time += used_cpu
+        core.token += 1
+        core.job, core.state = None, "idle"
+        return job
+
+    def _ev_f_seg_end(self, core_idx: int, token: int):
+        core = self.cores[core_idx]
+        if core.token != token:
+            return
+        used = max(self.now - core.seg_start, 0.0)
+        job = self._filter_release(core, used)
+        if job.to_completion() <= _EPS:                      # 4.1 done
+            job.finish = self.now
+            self.finished += 1
+        elif job.slice_left is not None and job.slice_left <= _EPS:
+            job.n_ctx += 1
+            self.n_ctx_total += 1
+            if self.cfg.policy == "rr":                      # RR: back to tail
+                self._enqueue_global(job)
+            else:                                            # 4.2 demote
+                job.demoted = True
+                self._cfs_enqueue(job)
+        else:                                                # shouldn't happen
+            self._enqueue_global(job)
+        self._dispatch(self.now)
+
+    def _ev_f_io_detect(self, core_idx: int, token: int, t_block: float):
+        """io-aware: worker poll notices the sleep (§V-D).
+
+        CPU consumed is only up to t_block; the (now - t_block) gap held the
+        core but burned no slice (the worker 'records the unused time slice').
+        """
+        core = self.cores[core_idx]
+        if core.token != token:
+            return
+        job = self._filter_release(core, t_block - core.seg_start)
+        job.n_ctx += 1
+        self.n_ctx_total += 1
+        dur = job.next_io_dur()
+        job.io_idx += 1
+        self._push(t_block + dur, "f_io_done", job.req.rid)
+        self._dispatch(self.now)
+
+    def _ev_f_obliv_block(self, core_idx: int, token: int):
+        """io-oblivious ablation: worker keeps the core + the slice ticking."""
+        core = self.cores[core_idx]
+        if core.token != token:
+            return
+        job = core.job
+        used = self.now - core.seg_start
+        job.cpu_done += used
+        self.busy_time += used
+        dur = job.next_io_dur()
+        job.io_idx += 1
+        slice_after = (job.slice_left - used - dur
+                       if job.slice_left is not None else _INF)
+        if slice_after <= _EPS and self.cfg.policy == "sfs":
+            # slice burns out mid-I/O: worker demotes at expiry, frees core
+            t_expire = self.now + max(job.slice_left - used, 0.0)
+            job.slice_left = 0.0
+            core.token += 1
+            core.job, core.state = None, "idle"
+            job.demoted = True
+            job.n_ctx += 1
+            self.n_ctx_total += 1
+            self._push(self.now + dur, "obliv_io_to_cfs", job.req.rid)
+            self._push(t_expire, "kick", )
+        else:
+            # core held (worker believes the fn is running); resume on wake
+            job.slice_left = (job.slice_left - used - dur
+                              if job.slice_left is not None else None)
+            core.state = "held"
+            core.token += 1
+            self._push(self.now + dur, "obliv_resume", core.idx, core.token)
+
+    def _ev_obliv_resume(self, core_idx: int, token: int):
+        core = self.cores[core_idx]
+        if core.token != token:
+            return
+        job = core.job
+        core.job, core.state = None, "idle"
+        core.token += 1
+        self._filter_start(core, job)
+
+    def _ev_obliv_io_to_cfs(self, rid: int):
+        self._cfs_enqueue(self.jobs[rid])
+        self._dispatch(self.now)
+
+    def _ev_kick(self):
+        self._dispatch(self.now)
+
+    def _ev_f_io_done(self, rid: int):
+        """io-aware wake-up: back to the global queue (keeps leftover slice)."""
+        job = self.jobs[rid]
+        self._enqueue_global(job)
+        self._dispatch(self.now)
+
+    # -- CFS pool ---------------------------------------------------------
+    def _cfs_enqueue(self, job: _Job):
+        job.vruntime = max(job.vruntime, self.cfs_min_vruntime)
+        self._seq += 1
+        heapq.heappush(self.cfs_rq, (job.vruntime, self._seq, job))
+
+    def _cfs_nr_runnable(self) -> int:
+        return len(self.cfs_rq) + sum(1 for c in self.cores
+                                      if c.state == "cfs")
+
+    def _cfs_start(self, core: _Core):
+        vr, _, job = heapq.heappop(self.cfs_rq)
+        self.cfs_min_vruntime = max(self.cfs_min_vruntime, vr)
+        nr = self._cfs_nr_runnable() + 1
+        slice_ = max(self.cfg.cfs_latency_s / nr, self.cfg.cfs_min_gran_s)
+        cost = self.cfg.ctx_switch_cost_s if core.last_rid != job.req.rid \
+            else 0.0
+        core.last_rid = job.req.rid
+        start = self.now + cost
+        core.job, core.state, core.seg_start = job, "cfs", start
+        core.token += 1
+        seg = max(min(slice_, job.to_completion(), job.to_next_io()), 0.0)
+        cause = "slice"
+        if job.to_completion() <= seg + _EPS:
+            seg, cause = job.to_completion(), "done"
+        if job.to_next_io() <= seg + _EPS:
+            seg, cause = job.to_next_io(), "io"
+        self._push(start + max(seg, 0.0), "c_seg_end", core.idx,
+                   core.token, cause)
+
+    def _cfs_preempt(self, core: _Core):
+        """A FILTER job claims this core; the CFS task goes back runnable."""
+        job = core.job
+        used = max(self.now - core.seg_start, 0.0)
+        job.cpu_done += used
+        job.vruntime += used
+        self.busy_time += used
+        job.n_ctx += 1
+        self.n_ctx_total += 1
+        core.token += 1
+        core.job, core.state = None, "idle"
+        self._cfs_enqueue(job)
+
+    def _ev_c_seg_end(self, core_idx: int, token: int, cause: str):
+        core = self.cores[core_idx]
+        if core.token != token:
+            return
+        job = core.job
+        used = max(self.now - core.seg_start, 0.0)
+        job.cpu_done += used
+        job.vruntime += used
+        self.busy_time += used
+        core.token += 1
+        core.job, core.state = None, "idle"
+        if cause == "done" or job.to_completion() <= _EPS:
+            job.finish = self.now
+            self.finished += 1
+        elif cause == "io" or job.to_next_io() <= _EPS:
+            dur = job.next_io_dur()
+            job.io_idx += 1
+            self._push(self.now + dur, "c_io_done", job.req.rid)
+        else:                                   # slice expiry
+            if self.cfs_rq:
+                job.n_ctx += 1
+                self.n_ctx_total += 1
+            self._cfs_enqueue(job)
+        self._dispatch(self.now)
+
+    def _ev_c_io_done(self, rid: int):
+        self._cfs_enqueue(self.jobs[rid])
+        self._dispatch(self.now)
+
+    # -- results ----------------------------------------------------------
+    def _result(self) -> SimResult:
+        stats, mk = [], 0.0
+        for r in self.reqs:
+            j = self.jobs[r.rid]
+            assert j.finish is not None, f"job {r.rid} never finished"
+            stats.append(JobStats(r.rid, r.arrival, r.service, r.total_io,
+                                  j.finish, j.n_ctx, j.demoted,
+                                  j.queue_delay))
+            mk = max(mk, j.finish)
+        qd = [(s.arrival, s.queue_delay) for s in stats]
+        return SimResult(stats, self.busy_time, mk, self.n_ctx_total, qd,
+                         list(self.slice_timeline))
+
+
+def simulate(requests, cfg: SimConfig) -> SimResult:
+    """Run one policy over a workload; deterministic given the workload."""
+    return Simulator(requests, cfg).run()

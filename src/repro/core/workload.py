@@ -1,0 +1,167 @@
+"""FaaSBench: FaaS workload generation modeled after the Azure Functions traces.
+
+Reproduces the paper's §VII methodology:
+
+* Function duration follows the multimodal distribution of Azure Day-1
+  invocations (Table I of the paper).  We simulate *durations* directly
+  rather than calibrating ``fib(N)`` — the mapping in Table I exists only to
+  realize a target duration on real hardware.
+* Inter-arrival times (IATs) are configurable: ``poisson`` (exponential),
+  ``uniform``, or ``trace`` (lognormal bursts that mimic the transient
+  overload spikes of Fig. 12).
+* The ``io`` knob toggles a single leading I/O operation of U[10,100] ms on a
+  configurable fraction of requests (§VIII-B "Handling I/O").
+
+Loads are expressed as target per-core utilization rho; the generator solves
+lambda = rho * c / E[service] and scales IATs accordingly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Request model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """A single function invocation.
+
+    ``io_events`` is a tuple of ``(cpu_offset_s, io_duration_s)`` pairs: after
+    the job has consumed ``cpu_offset_s`` seconds of CPU it blocks for
+    ``io_duration_s`` seconds of I/O (off-CPU).
+    """
+
+    rid: int
+    arrival: float                      # seconds since workload start
+    service: float                      # total CPU demand, seconds
+    io_events: tuple = ()               # ((cpu_offset, io_dur), ...)
+
+    @property
+    def total_io(self) -> float:
+        return float(sum(d for _, d in self.io_events))
+
+    @property
+    def ideal_turnaround(self) -> float:
+        """Turnaround on an idle, infinitely-parallel machine (IDEAL)."""
+        return self.service + self.total_io
+
+
+# ---------------------------------------------------------------------------
+# Azure Table-I duration distribution
+# ---------------------------------------------------------------------------
+
+# (probability, lo_ms, hi_ms).  Table I covers 95.6 % of mass; the paper notes
+# every missing range holds <1 % each — we place the remaining 4.4 % in the
+# (400, 1550) ms gap, log-uniform, which matches Fig. 1's smooth CDF there.
+#
+# The >=1550 ms bucket is realized by fib(N) for N in {34, 35} (Table I),
+# i.e. ~1.55-3.5 s of CPU — NOT the full Azure tail.  This cap is visible in
+# the paper's own data: CFS p99.9 = 3.3 s under 50 % load (Fig. 8) can only
+# happen if the longest benchmark functions are ~3 s.  The "17 % relatively
+# longer functions" of the headline claim = this bucket.
+AZURE_TABLE_I = (
+    (0.406, 1.0, 50.0),
+    (0.098, 50.0, 100.0),
+    (0.068, 100.0, 200.0),
+    (0.227, 200.0, 400.0),
+    (0.044, 400.0, 1550.0),
+    (0.157, 1550.0, 3_500.0),    # fib(34-35) realization of the >=1.55s bucket
+)
+
+# The raw Azure Day-1 tail (up to the 99.9th-pct 224 s) for Fig.-1 analysis.
+AZURE_TABLE_I_RAW_TAIL = AZURE_TABLE_I[:-1] + ((0.157, 1550.0, 224_000.0),)
+
+
+def _sample_durations(rng: np.random.Generator, n: int,
+                      table: Sequence = AZURE_TABLE_I) -> np.ndarray:
+    probs = np.array([p for p, _, _ in table], dtype=np.float64)
+    probs = probs / probs.sum()
+    bucket = rng.choice(len(table), size=n, p=probs)
+    lo = np.array([b[1] for b in table])[bucket]
+    hi = np.array([b[2] for b in table])[bucket]
+    # log-uniform within a bucket: matches the heavy intra-bucket skew of the
+    # Azure CDF far better than uniform.
+    u = rng.random(n)
+    ms = np.exp(np.log(lo) + u * (np.log(hi) - np.log(lo)))
+    return ms / 1e3  # seconds
+
+
+# ---------------------------------------------------------------------------
+# FaaSBench generator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaaSBenchConfig:
+    n_requests: int = 10_000
+    cores: int = 12
+    load: float = 1.0                    # target per-core utilization rho
+    iat: str = "poisson"                 # poisson | uniform | trace
+    duration_table: Sequence = AZURE_TABLE_I
+    io_fraction: float = 0.0             # fraction of requests with an I/O op
+    io_ms_range: tuple = (10.0, 100.0)
+    seed: int = 0
+    # trace-IAT burstiness (Fig. 12): lognormal sigma and spike injection
+    trace_sigma: float = 1.6
+    n_spikes: int = 5
+    spike_size: int = 120                # requests per spike
+    spike_iat_s: float = 1e-3
+
+
+def generate(cfg: FaaSBenchConfig) -> list[Request]:
+    """Generate a reproducible FaaS workload."""
+    rng = np.random.default_rng(cfg.seed)
+    n = cfg.n_requests
+    service = _sample_durations(rng, n, cfg.duration_table)
+    mean_service = float(service.mean())
+
+    # lambda = rho * c / E[S]  (Eq. 2 of the paper, solved for arrival rate)
+    # NOTE: normalized below so the *empirical* offered load equals cfg.load
+    # exactly — near rho = 1 the queueing behaviour is dominated by the
+    # drift term, so sampling noise of a few percent changes the regime.
+    lam = cfg.load * cfg.cores / mean_service
+    mean_iat = 1.0 / lam
+
+    if cfg.iat == "poisson":
+        iats = rng.exponential(mean_iat, size=n)
+    elif cfg.iat == "uniform":
+        iats = rng.uniform(0.0, 2.0 * mean_iat, size=n)
+    elif cfg.iat == "trace":
+        # lognormal IATs (bursty) + a few dense spikes, normalized to the
+        # requested mean so the average load is preserved.
+        mu = math.log(mean_iat) - 0.5 * cfg.trace_sigma ** 2
+        iats = rng.lognormal(mu, cfg.trace_sigma, size=n)
+        spike_at = rng.choice(n - cfg.spike_size, size=cfg.n_spikes,
+                              replace=False)
+        for s in spike_at:
+            iats[s:s + cfg.spike_size] = cfg.spike_iat_s
+        iats *= mean_iat * n / iats.sum()
+    else:
+        raise ValueError(f"unknown iat kind: {cfg.iat!r}")
+
+    # exact-load normalization: scale IATs so busy/(span*cores) == load
+    span_target = service.sum() / (cfg.load * cfg.cores)
+    iats = iats * (span_target / iats.sum())
+    arrivals = np.cumsum(iats)
+    has_io = rng.random(n) < cfg.io_fraction
+    io_dur = rng.uniform(cfg.io_ms_range[0], cfg.io_ms_range[1], size=n) / 1e3
+
+    out = []
+    for i in range(n):
+        io = ((0.0, float(io_dur[i])),) if has_io[i] else ()
+        out.append(Request(rid=i, arrival=float(arrivals[i]),
+                           service=float(service[i]), io_events=io))
+    return out
+
+
+def offered_load(reqs: Sequence[Request], cores: int) -> float:
+    """Empirical rho of a generated workload (sanity check for tests)."""
+    span = reqs[-1].arrival - reqs[0].arrival
+    busy = sum(r.service for r in reqs)
+    return busy / (span * cores) if span > 0 else float("inf")

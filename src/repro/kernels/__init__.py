@@ -1,0 +1,12 @@
+"""TPU Pallas kernels for the perf-critical compute hot spots.
+
+Each kernel ships three layers: ``kernel.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ``ops.py`` (jitted model-layout wrapper, interpret
+mode off-TPU), ``ref.py`` (pure-jnp oracle used by the allclose sweeps in
+tests/test_kernels.py).
+
+  flash_attention/   — prefill/train attention (online softmax, GQA, causal
+                       block skipping)
+  decode_attention/  — single-query flash-decoding over long KV caches
+  ssd_scan/          — Mamba2 SSD intra-chunk dual form
+"""

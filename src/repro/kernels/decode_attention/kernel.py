@@ -1,0 +1,97 @@
+"""Decode (single-query) attention Pallas kernel — flash-decoding on TPU.
+
+One new token attends over a long KV cache: the workload is pure HBM
+bandwidth (read Skv x K x D twice), so the kernel streams kv blocks
+through VMEM with the online-softmax state for *all* query heads resident
+in scratch (H x D floats — tiny).  kv-blocks past ``kv_len`` are masked;
+whole blocks past the length are predicated out with ``pl.when`` so a
+short sequence in a long cache costs only its prefix.
+
+Layouts: q [B, H, D]; k, v [B, Skv, K, D]; kv_len [B] int32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, bk: int, G: int,
+                   scale: float):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+    kv_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(ki * bk < kv_len)                  # skip blocks past the length
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale           # [H, D]
+        k = k_ref[0].astype(jnp.float32)                   # [bk, K, D]
+        v = v_ref[0].astype(jnp.float32)                   # [bk, K, D]
+        H, D = q.shape
+        K = k.shape[1]
+        qg = q.reshape(K, G, D)
+        s = jax.lax.dot_general(qg, k, (((2,), (2,)), ((0,), (1,))))
+        # s: [K, G, bk]
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        sf = s.reshape(H, -1)                              # [H, bk]
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, sf.max(axis=1))
+        p = jnp.exp(sf - m_new[:, None])
+        p = jnp.where(sf <= NEG_INF / 2, 0.0, p)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p.reshape(K, G, -1), v,
+                                 (((2,), (0,)), ((0,), (1,))))  # [K,G,D]
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + pv.reshape(H, D))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, kv_len, *, bk: int = 1024,
+                            interpret: bool = True) -> jax.Array:
+    """q: [B,H,D]; k,v: [B,Skv,K,D]; kv_len: [B] -> [B,H,D]."""
+    B, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    bk = min(bk, Skv)
+    assert Skv % bk == 0, (Skv, bk)
+    nk = Skv // bk
+    scale = 1.0 / math.sqrt(D)
+    kernel = functools.partial(_decode_kernel, bk=bk, G=G, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (b,)),
+            pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, bk, K, D), lambda b, ki: (b, ki, 0, 0)),
+            pl.BlockSpec((1, bk, K, D), lambda b, ki: (b, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, D), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+            pltpu.VMEM((H,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q, k, v)

@@ -1,0 +1,18 @@
+"""Jitted wrapper for decode attention (model layout [B,1,H,D] + cache)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("bk",))
+def decode_attention(q, k_cache, v_cache, kv_len, *, bk: int = 1024):
+    """q: [B,1,H,D]; caches [B,Smax,K,D]; kv_len [B] -> [B,1,H,D]."""
+    interpret = jax.default_backend() != "tpu"
+    o = decode_attention_pallas(q[:, 0], k_cache, v_cache, kv_len,
+                                bk=min(bk, k_cache.shape[1]),
+                                interpret=interpret)
+    return o[:, None]

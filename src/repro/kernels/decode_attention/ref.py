@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_len) -> jax.Array:
+    """q: [B,H,D]; k,v: [B,Skv,K,D]; kv_len: [B] -> [B,H,D]."""
+    B, H, D = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, D).astype(jnp.float32) / math.sqrt(D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    valid = jnp.arange(Skv)[None, :] < kv_len.reshape(B, 1)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Flash-attention TPU Pallas kernel (online softmax, GQA, causal).
+
+TPU adaptation of the FlashAttention tiling: the kv-block index is the
+innermost *sequential* grid dimension, so the (acc, m, l) running state
+lives in VMEM scratch across kv iterations — no HBM round-trips for the
+softmax statistics (the TPU grid is sequential per core, unlike CUDA
+thread blocks, so the accumulator pattern replaces atomics/shared memory).
+
+Layouts: q [B, H, Sq, D]; k, v [B, K, Skv, D] (K kv heads, GQA).  Block
+shapes (bq x D), (bk x D) are MXU-aligned for D in {64, 80, 128, 256}.
+Causal blocks entirely above the diagonal are predicated out with
+``pl.when`` (no FLOPs on real hardware; the grid itself stays static).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 causal: bool, scale: float, bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # causal block skipping: the whole block is above the diagonal
+    run = (not causal) or (q_start + bq - 1 >= k_start)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # [bq, D]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bk, D]
+        v = v_ref[0, 0].astype(jnp.float32)               # [bk, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        if causal:
+            p = jnp.where(s <= NEG_INF / 2, 0.0, p)       # fully-masked rows
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, bq: int = 512,
+                           bk: int = 512,
+                           interpret: bool = True) -> jax.Array:
+    """q: [B,H,Sq,D]; k,v: [B,K,Skv,D] -> [B,H,Sq,D]."""
+    B, H, Sq, D = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(_attn_kernel, causal=causal, scale=scale,
+                               bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

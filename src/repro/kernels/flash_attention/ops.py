@@ -1,0 +1,30 @@
+"""Jitted public wrapper: model layout in, kernel layout inside.
+
+``flash_attention`` accepts the model's [B, S, H, D] activation layout and
+dispatches to the Pallas kernel (interpret=True off-TPU so CPU tests
+execute the same kernel body that runs on hardware).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, bq: int = 512,
+                    bk: int = 512) -> jax.Array:
+    """q: [B,Sq,H,D]; k,v: [B,Skv,K,D] -> [B,Sq,H,D] (model layout)."""
+    interpret = jax.default_backend() != "tpu"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_pallas(qt, kt, vt, causal=causal,
+                               bq=min(bq, q.shape[1]),
+                               bk=min(bk, k.shape[1]),
+                               interpret=interpret)
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,28 @@
+"""Jitted wrapper used by ``repro.models.mamba2.ssd_chunked(impl='pallas')``."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_intra_chunk_pallas
+
+
+def ssd_intra_chunk(xc, dtc, la, cum, tot, Bc, Cc, R: int):
+    """Adapter matching the call site in mamba2.ssd_chunked.
+
+    (``la`` — per-step log decay — is unused: the kernel consumes the
+    cumulative sums directly.)
+    """
+    del la
+    assert R == xc.shape[3] // Bc.shape[3]
+    interpret = jax.default_backend() != "tpu"
+    H = xc.shape[3]
+    hb = 8 if H % 8 == 0 else (4 if H % 4 == 0 else 1)
+    return _call(xc, dtc, cum, tot, Bc, Cc, hb, interpret)
+
+
+@partial(jax.jit, static_argnames=("hb", "interpret"))
+def _call(xc, dtc, cum, tot, Bc, Cc, hb, interpret):
+    return ssd_intra_chunk_pallas(xc, dtc, cum, tot, Bc, Cc, hb=hb,
+                                  interpret=interpret)

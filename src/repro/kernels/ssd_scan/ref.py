@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd_intra_chunk_ref(xc, dtc, cum, tot, Bc, Cc):
+    """Same shapes as the kernel; returns (y_intra, states) in f32."""
+    b, nc, Q, H, P = xc.shape
+    G = Bc.shape[3]
+    R = H // G
+    xf = xc.astype(jnp.float32)
+    dtf = dtc.astype(jnp.float32)
+    cumf = cum.astype(jnp.float32)
+    dec = cumf[:, :, :, None, :] - cumf[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    L = jnp.exp(dec)
+    s = jnp.einsum("bclgn,bcmgn->bclmg", Cc.astype(jnp.float32),
+                   Bc.astype(jnp.float32))
+    s = jnp.repeat(s, R, axis=-1)
+    w = s * L * dtf[:, :, None, :, :]
+    y = jnp.einsum("bclmh,bcmhp->bclhp", w, xf)
+    decay_to_end = jnp.exp(tot.astype(jnp.float32)[:, :, None, :] - cumf)
+    wB = jnp.repeat(Bc.astype(jnp.float32), R, axis=3).reshape(
+        b, nc, Q, H, -1)
+    states = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                        decay_to_end, dtf, wB, xf)
+    return y, states

@@ -1,0 +1,5 @@
+"""Model substrate: layers, families (dense/moe/ssm/hybrid/vlm/audio)."""
+from repro.models.config import ModelConfig
+from repro.models import layers, mamba2, moe, transformer
+
+__all__ = ["ModelConfig", "layers", "mamba2", "moe", "transformer"]

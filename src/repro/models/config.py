@@ -1,0 +1,140 @@
+"""ModelConfig — one dataclass describing every assigned architecture family.
+
+``family`` selects the block structure:
+  dense  — pre-norm decoder blocks (GQA attention + gated MLP)
+  moe    — dense attention + MoE FFN every layer
+  ssm    — Mamba2 (SSD) blocks, attention-free
+  hybrid — Mamba2 backbone + one *shared* attention block applied every
+           ``attn_every`` layers (Zamba2)
+  vlm    — dense decoder whose first ``n_prefix`` positions take precomputed
+           patch embeddings (frontend stub per the assignment)
+  audio  — encoder-only (bidirectional) transformer over precomputed frame
+           embeddings (HuBERT backbone; frontend stub)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.models.mamba2 import SSMConfig
+from repro.models.moe import MoEConfig
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    # attention (ignored for family == "ssm")
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    activation: str = "swiglu"       # swiglu | geglu
+    qkv_bias: bool = False
+    rope_fraction: float = 1.0       # 0.5 => partial rotary (ChatGLM "2d")
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    embed_scale: bool = False        # Gemma: scale embeds by sqrt(d)
+    # family extras
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    attn_every: int = 0              # hybrid: shared attn every k ssm layers
+    n_prefix: int = 0                # vlm: vision-embedding positions
+    # ---- performance / distribution knobs (not architecture) ----
+    attn_impl: str = "blocked"       # dense | blocked | pallas
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    block_skip: bool = True
+    remat: str = "block"             # none | block
+    scan_layers: bool = True
+    microbatch: int = 1
+    # grad accumulation strategy over microbatches:
+    #   scan   — explicit f32/bf16 accumulator carried through a scan
+    #   unroll — python loop (in-place buffer chains, bigger HLO)
+    #   fused  — differentiate THROUGH the microbatch scan: the backward
+    #            pass's loop carry is the only grad buffer (params-dtype);
+    #            ~3x less grad memory, used by the >=100B archs
+    grad_accum: str = "scan"
+    grad_accum_dtype: str = "float32"   # float32 | bfloat16 (scan/unroll)
+    optimizer: str = "adamw"         # adamw | adafactor
+    fsdp: bool = False
+    # sharding profile over the fixed (pod, data, model) mesh:
+    #   tp_sp     — tensor parallel on "model" + Megatron sequence
+    #               parallelism (baseline; right for >=100B archs)
+    #   fsdp_only — no tensor parallelism: batch and ZeRO-3 weight shards
+    #               span data x model; collectives become per-layer weight
+    #               gathers instead of per-layer activation gathers —
+    #               the §Perf winner for small archs at 256 chips
+    sharding_profile: str = "tp_sp"
+    # dtype of parameters/activations
+    dtype: str = "bfloat16"
+    # KV-cache storage: "bfloat16" | "int8" (per-token-head scales; halves
+    # decode's HBM traffic — beyond-paper serving optimization, §Perf)
+    kv_cache_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "vlm",
+                               "audio"), self.family
+        if self.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+            assert self.n_heads > 0 and self.head_dim > 0
+            assert self.n_heads % max(self.n_kv_heads, 1) == 0
+        if self.family in ("ssm", "hybrid"):
+            assert self.ssm is not None
+        if self.family == "moe":
+            assert self.moe is not None
+
+    @property
+    def causal(self) -> bool:
+        return self.family != "audio"
+
+    @property
+    def has_decode(self) -> bool:
+        return self.family != "audio"
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_vocab(self.vocab)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- parameter count (for roofline MODEL_FLOPS) ----
+    def param_count(self, active_only: bool = False) -> int:
+        d, L, V = self.d_model, self.n_layers, self.vocab_padded
+        n = V * d                                     # embedding
+        if not self.tie_embeddings:
+            n += d * V                                # lm_head
+        if self.family in ("ssm", "hybrid"):
+            s = self.ssm
+            d_inner = s.expand * d
+            H = d_inner // s.head_dim
+            d_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H
+            conv_ch = d_inner + 2 * s.n_groups * s.d_state
+            per = (d * d_proj + s.conv_width * conv_ch + conv_ch
+                   + 3 * H + d_inner + d_inner * d + d)
+            n += L * per
+            if self.family == "hybrid":
+                hd = self.n_heads * self.head_dim
+                kvd = self.n_kv_heads * self.head_dim
+                n += d * hd + 2 * d * kvd + hd * d      # one shared attn
+                n += 3 * d * self.d_ff                  # shared MLP
+            return n
+        hd = self.n_heads * self.head_dim
+        kvd = self.n_kv_heads * self.head_dim
+        attn = d * hd + 2 * d * kvd + hd * d
+        if self.family == "moe":
+            m = self.moe
+            ffn = d * m.n_experts * 3 * m.d_ff_expert + d * m.n_experts
+            ffn_active = d * m.top_k * 3 * m.d_ff_expert + d * m.n_experts
+        else:
+            ffn = ffn_active = 3 * d * self.d_ff
+        n += L * (attn + (ffn_active if active_only else ffn))
+        return n

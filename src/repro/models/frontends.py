@@ -1,0 +1,29 @@
+"""Modality frontends — STUBS per the assignment.
+
+The ``[audio]`` / ``[vlm]`` architectures specify the transformer backbone
+only; ``input_specs()`` provides precomputed frame/patch embeddings.  These
+helpers generate deterministic synthetic embeddings with the right shapes
+for smoke tests and examples (a real deployment would plug a conv feature
+extractor / ViT tower here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def synth_vision_embeds(cfg: ModelConfig, key, batch: int) -> jax.Array:
+    """[B, n_prefix, d_model] patch embeddings (llava anyres tiling stub)."""
+    assert cfg.family == "vlm"
+    return jax.random.normal(key, (batch, cfg.n_prefix, cfg.d_model),
+                             jnp.float32).astype(jnp.dtype(cfg.dtype)) * 0.02
+
+
+def synth_audio_frames(cfg: ModelConfig, key, batch: int,
+                       n_frames: int) -> jax.Array:
+    """[B, S, d_model] frame embeddings (wav2vec2-style conv frontend stub)."""
+    assert cfg.family == "audio"
+    return jax.random.normal(key, (batch, n_frames, cfg.d_model),
+                             jnp.float32).astype(jnp.dtype(cfg.dtype)) * 0.02

@@ -1,0 +1,371 @@
+"""Shared neural-net layers (pure JAX, functional, scan-friendly).
+
+Every layer is a pair of functions: ``init_*`` returning a pytree of
+parameters and an apply function taking ``(params, ...)``.  Parameters are
+plain nested dicts so they stack cleanly under ``jax.lax.scan`` over layers
+and shard under pjit via the logical-axis plan in ``repro.sharding.plan``.
+
+Attention comes in three interchangeable implementations:
+
+* ``dense``   — reference O(S^2) materialized scores (small shapes, oracles)
+* ``blocked`` — flash-style two-level scan with online softmax, O(S*block)
+                memory; the default for training/prefill at scale
+* ``pallas``  — TPU Pallas kernel (``repro.kernels.flash_attention``),
+                enabled with ``impl='pallas'`` on real TPU hardware
+
+All three are numerically cross-checked in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.plan import shard
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=DEFAULT_DTYPE,
+               scale: Optional[float] = None) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LM pretraining setups)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out),
+                                        jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=DEFAULT_DTYPE) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (1.0 / math.sqrt(d))).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation, cast back to input dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (full / partial / 2d-interleaved)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                rope_fraction: float = 1.0,
+                theta: float = 10_000.0) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for the rotary fraction of ``head_dim``.
+
+    positions: integer array [...] (any shape); returns cos/sin of shape
+    positions.shape + (rot_dim // 2,).
+    """
+    rot_dim = int(head_dim * rope_fraction)
+    rot_dim -= rot_dim % 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2,
+                                           dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate the leading ``2 * cos.shape[-1]`` channels of the head dim.
+
+    x: [..., S, H, D]; cos/sin: [..., S, R/2] broadcast over heads.  The
+    trailing ``D - R`` channels pass through (partial rotary, ChatGLM-style).
+    """
+    r2 = cos.shape[-1]
+    rot, rest = x[..., :2 * r2], x[..., 2 * r2:]
+    x1, x2 = rot[..., :r2], rot[..., r2:]
+    cos = cos[..., None, :]  # broadcast over the head axis
+    sin = sin[..., None, :]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2, rest], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, dtype=DEFAULT_DTYPE) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, activation: str = "swiglu") -> jax.Array:
+    # the hidden constraint pins ff->"model": under sequence parallelism
+    # XLA then gathers the (small) activations over seq rather than the
+    # (huge) weights over model — the Megatron-SP collective pattern
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    g = shard(g, "batch", "seq", "ff")
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    u = shard(u, "batch", "seq", "ff")
+    if activation == "swiglu":
+        h = jax.nn.silu(g) * u
+    elif activation == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(f"unknown activation {activation!r}")
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def init_attention(key, d: int, dims: AttnDims, qkv_bias: bool = False,
+                   dtype=DEFAULT_DTYPE) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    H, K, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    p = {
+        "wq": dense_init(kq, d, H * hd, dtype),
+        "wk": dense_init(kk, d, K * hd, dtype),
+        "wv": dense_init(kv, d, K * hd, dtype),
+        "wo": dense_init(ko, H * hd, d, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    return p
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """[B,S,K,D] -> [B,S,H,D] by repeating each kv head H/K times."""
+    b, s, kh, d = k.shape
+    rep = n_heads // kh
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def dense_attention(q, k, v, *, causal: bool, q_offset=0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention. q:[B,Sq,H,D] k,v:[B,Sk,K,D] -> [B,Sq,H,D].
+
+    ``q_offset`` is the absolute position of q[…,0] (for causal masking of
+    incremental decode).  ``kv_len`` masks out cache positions >= kv_len.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = None
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = qpos >= kpos
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < jnp.asarray(kv_len).reshape(-1, 1)
+        valid = valid[:, None, None, :]  # [B,1,1,Sk]
+        mask = valid if mask is None else (mask[None, None] & valid)
+    elif mask is not None:
+        mask = mask[None, None]
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 512, block_skip: bool = True
+                      ) -> jax.Array:
+    """Flash-style attention: online softmax over kv blocks, chunked q.
+
+    Memory is O(B * H * q_chunk * kv_chunk) per step instead of O(S^2).
+    With ``block_skip`` (causal only) each q chunk scans only its causal kv
+    prefix, halving FLOPs vs full-masked computation.
+    q: [B,Sq,H,D]; k,v: [B,Sk,K,D]  (K divides H, GQA) -> [B,Sq,H,D]
+    """
+    B, Sq_real, H, D = q.shape
+    Sk_real = k.shape[1]
+    K = k.shape[2]
+    G = H // K                       # query heads per kv head
+    scale = 1.0 / math.sqrt(D)
+    q_chunk = min(q_chunk, Sq_real)
+    kv_chunk = min(kv_chunk, Sk_real)
+    # pad ragged tails; padded kv positions are masked below
+    q = _pad_seq(q, q_chunk)
+    k = _pad_seq(k, kv_chunk)
+    v = _pad_seq(v, kv_chunk)
+    Sq, Sk = q.shape[1], k.shape[1]
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    kv_padded = Sk != Sk_real
+
+    # [B, nk, C, K, D] blocked kv
+    kb = k.reshape(B, nk, kv_chunk, K, D)
+    vb = v.reshape(B, nk, kv_chunk, K, D)
+
+    def q_block(qi: int, qc: jax.Array) -> jax.Array:
+        """qc: [B, q_chunk, H, D] -> attention output for this q block."""
+        qcg = qc.reshape(B, q_chunk, K, G, D).astype(jnp.float32) * scale
+        q0 = qi * q_chunk
+
+        def kv_step(carry, blk):
+            acc, m, l = carry
+            kc, vc, k0 = blk          # [B,C,K,D], [B,C,K,D], scalar
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qcg, kc.astype(jnp.float32))
+            kpos = k0 + jnp.arange(kv_chunk)
+            if causal:
+                qpos = q0 + jnp.arange(q_chunk)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            elif kv_padded:
+                s = jnp.where((kpos < Sk_real)[None, None, None, None],
+                              s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, K, G, q_chunk, D), jnp.float32)
+        m0 = jnp.full((B, K, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_chunk), jnp.float32)
+
+        if causal and block_skip:
+            # only kv blocks whose start <= q block end participate
+            n_vis = min(nk, (q0 + q_chunk + kv_chunk - 1) // kv_chunk)
+        else:
+            n_vis = nk
+        ks = jnp.moveaxis(kb[:, :n_vis], 1, 0)    # [n_vis,B,C,K,D]
+        vs = jnp.moveaxis(vb[:, :n_vis], 1, 0)
+        k0s = jnp.arange(n_vis) * kv_chunk
+        (acc, m, l), _ = lax.scan(kv_step, (acc0, m0, l0), (ks, vs, k0s))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B,K,G,q,D] -> [B,q,K*G,D]
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, D)
+
+    outs = []
+    for qi in range(nq):
+        qc = lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        outs.append(q_block(qi, qc))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out[:, :Sq_real].astype(q.dtype)
+
+
+def _pad_seq(x: jax.Array, chunk: int) -> jax.Array:
+    """Pad the seq axis (1) of [B,S,...] up to a multiple of ``chunk``."""
+    S = x.shape[1]
+    rem = S % chunk
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, chunk - rem)
+    return jnp.pad(x, pad)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     extra_kv: Optional[tuple] = None) -> jax.Array:
+    """Single-position attention against a (possibly padded) KV cache.
+
+    q: [B,1,H,D]; k_cache/v_cache: [B,Smax,K,D]; kv_len: [B] = number of
+    valid cache positions.  If ``extra_kv`` is None the new token's k/v
+    must already be written at kv_len-1; otherwise ``extra_kv`` is the
+    in-flight token's (k_new, v_new) [B,1,K,D] attended *in addition* to
+    the kv_len cache entries — the deferred-cache-commit path, which lets
+    the decode layer scan read the cache without carrying a written copy
+    (kills the cache double-buffer through the loop).
+
+    int8 cache: pass per-token-head ``k_scale``/``v_scale`` [B,Smax,K];
+    the scales fold into the score/value contractions (no dequantized
+    cache copy is materialized — HBM reads stay int8).
+    """
+    B, _, H, D = q.shape
+    Smax, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, K, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    if k_scale is not None:
+        s = s * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    valid = jnp.arange(Smax)[None, :] < kv_len.reshape(B, 1)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    if extra_kv is not None:
+        k_new, v_new = extra_kv
+        s_x = jnp.einsum("bkgd,bxkd->bkgx", qg,
+                         k_new.astype(jnp.float32))       # [B,K,G,1]
+        s = jnp.concatenate([s, s_x], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    if extra_kv is not None:
+        p, p_x = p[..., :Smax], p[..., Smax:]
+    if v_scale is not None:
+        p = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    if extra_kv is not None:
+        out = out + jnp.einsum("bkgx,bxkd->bkgd", p_x,
+                               v_new.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-token-head symmetric int8. x: [..., K, D] -> (q, scale[..., K])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    s = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s.astype(jnp.float32)
+
+
+def attention_proj(params: dict, x: jax.Array, dims: AttnDims
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Project x -> (q, k, v) with shapes [B,S,H,D], [B,S,K,D], [B,S,K,D]."""
+    B, S, _ = x.shape
+    H, K, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = shard(jnp.einsum("bsd,de->bse", x, params["wq"]),
+              "batch", "seq", "heads")
+    k = jnp.einsum("bsd,de->bse", x, params["wk"])
+    v = jnp.einsum("bsd,de->bse", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, K, hd),
+            v.reshape(B, S, K, hd))
+
+
+def attention_out(params: dict, o: jax.Array) -> jax.Array:
+    B, S = o.shape[:2]
+    return jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), params["wo"])

@@ -1,0 +1,300 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunk-parallel in pure JAX.
+
+Implements the SSD algorithm of the Mamba2 paper (arXiv:2405.21060) adapted
+for TPU: the sequence is split into chunks of length ``Q``; within a chunk
+the quadratic (attention-dual) form runs on the MXU, across chunks a
+``lax.scan`` carries the [H,P,N] state.  A Pallas kernel for the intra-chunk
+part lives in ``repro.kernels.ssd_scan`` and is numerically validated
+against ``ssd_chunked`` here.
+
+Decode is the O(1) recurrent form: ``h = a*h + dt * B (x) x``; the "cache"
+is the SSM state plus the depthwise-conv tail — no KV growth, which is why
+the ssm/hybrid archs are the only ones assigned the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import DEFAULT_DTYPE, dense_init, init_rmsnorm, rms_norm
+from repro.sharding.plan import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2             # d_inner = expand * d_model
+    n_groups: int = 1           # G (B/C groups)
+    conv_width: int = 4
+    chunk: int = 256            # Q — SSD chunk length
+    dt_min: float = 1e-3
+    dt_max: float = 0.1
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig) -> tuple[int, int]:
+    d_inner = cfg.expand * d_model
+    n_heads = d_inner // cfg.head_dim
+    return d_inner, n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key, d_model: int, cfg: SSMConfig,
+                     dtype=DEFAULT_DTYPE) -> dict:
+    d_inner, H = ssm_dims(d_model, cfg)
+    G, N, W = cfg.n_groups, cfg.d_state, cfg.conv_width
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d_proj = 2 * d_inner + 2 * G * N + H   # z, x, B, C, dt
+    conv_ch = d_inner + 2 * G * N          # conv over x, B, C
+    # dt bias: softplus^-1 of log-uniform[dt_min, dt_max] (Mamba init)
+    u = jax.random.uniform(k3, (H,), jnp.float32)
+    dt0 = jnp.exp(u * (math.log(cfg.dt_max) - math.log(cfg.dt_min))
+                  + math.log(cfg.dt_min))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))   # inverse softplus
+    return {
+        "in_proj": dense_init(k1, d_model, d_proj, dtype),
+        "conv_w": (jax.random.normal(k2, (W, conv_ch), jnp.float32)
+                   / math.sqrt(W)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": init_rmsnorm(d_inner),
+        "out_proj": dense_init(k4, d_inner, d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked(x, dt, A, B, C, Q: int,
+                h0: Optional[jax.Array] = None,
+                impl: str = "jnp") -> tuple[jax.Array, jax.Array]:
+    """Chunk-parallel SSD.
+
+    x:  [b, S, H, P]   inputs per head
+    dt: [b, S, H]      positive step sizes
+    A:  [H]            negative decay rates (a = exp(A*dt))
+    B:  [b, S, G, N]   input projections (G groups, heads share within group)
+    C:  [b, S, G, N]   output projections
+    returns (y: [b,S,H,P], h_final: [b,H,P,N])
+    """
+    b, S_real, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    R = H // G                         # heads per group
+    # pad ragged tail with dt=0 steps (decay=1, zero contribution -> the
+    # final state and real outputs are unaffected)
+    rem = S_real % Q
+    if rem:
+        pad = Q - rem
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S = x.shape[1]
+    nc = S // Q
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    la = (A[None, None, :] * dtf).reshape(b, nc, Q, H)       # log a_t
+    xc = xf.reshape(b, nc, Q, H, P)
+    dtc = dtf.reshape(b, nc, Q, H)
+    Bc = Bf.reshape(b, nc, Q, G, N)
+    Cc = Cf.reshape(b, nc, Q, G, N)
+
+    cum = jnp.cumsum(la, axis=2)                             # [b,nc,Q,H]
+    tot = cum[:, :, -1, :]                                   # [b,nc,H]
+
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as _ssd_ops
+        y_intra, states = _ssd_ops.ssd_intra_chunk(xc, dtc, la, cum, tot,
+                                                   Bc, Cc, R)
+    else:
+        # --- intra-chunk (quadratic within chunk; runs on the MXU) --------
+        # decay[l,m] = exp(cum[l] - cum[m]) for l >= m
+        dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [b,nc,Q,Q,H]
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+        dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+        L = jnp.exp(dec)                                     # [b,nc,Q,Q,H]
+        # scores: (C_l . B_m) per group -> per head
+        s = jnp.einsum("bclgn,bcmgn->bclmg", Cc, Bc)         # [b,nc,Q,Q,G]
+        s = jnp.repeat(s, R, axis=-1)                        # [b,nc,Q,Q,H]
+        w = s * L * dtc[:, :, None, :, :]                    # weight x[m]
+        y_intra = jnp.einsum("bclmh,bcmhp->bclhp", w, xc)
+
+        # --- chunk summary states -----------------------------------------
+        # S_c = sum_m exp(tot - cum[m]) * dt[m] * B[m] (x) x[m]  : [b,nc,H,P,N]
+        decay_to_end = jnp.exp(tot[:, :, None, :] - cum)     # [b,nc,Q,H]
+        wB = jnp.repeat(Bc, R, axis=3).reshape(b, nc, Q, H, N)
+        states = jnp.einsum("bcqh,bcqh,bcqhn,bcqhp->bchpn",
+                            decay_to_end, dtc, wB, xc)
+
+    # --- inter-chunk recurrence over nc chunks ------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    def chunk_step(h, inp):
+        st, t = inp                                          # [b,H,P,N], [b,H]
+        h_new = h * jnp.exp(t)[:, :, None, None] + st
+        return h_new, h                                      # emit state *before* chunk
+
+    (h_final, h_prev) = lax.scan(chunk_step, h0,
+                                 (jnp.moveaxis(states, 1, 0),
+                                  jnp.moveaxis(tot, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                      # [b,nc,H,P,N]
+
+    # --- inter-chunk contribution: C_l . (exp(cum[l]) * h_prev) -------------
+    Ch = jnp.repeat(Cc, R, axis=3).reshape(b, nc, Q, H, N)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         Ch, jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y[:, :S_real].astype(x.dtype), h_final
+
+
+def ssd_reference(x, dt, A, B, C,
+                  h0: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """O(S) sequential oracle for tests: plain recurrence over time."""
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    R = H // G
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+
+    Bh = jnp.repeat(B.astype(jnp.float32), R, axis=2)
+    Ch = jnp.repeat(C.astype(jnp.float32), R, axis=2)
+    a = jnp.exp(A[None, None, :] * dt.astype(jnp.float32))   # [b,S,H]
+
+    def step(h, inp):
+        at, dtt, bt, ct, xt = inp
+        h = h * at[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0),
+          jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    h_final, ys = lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (prefill/train + decode step)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(seq, w, b, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv.  seq: [B,S,ch], w: [W,ch] -> [B,S,ch].
+
+    ``tail`` ([B,W-1,ch]) supplies state from previous tokens (decode)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((seq.shape[0], W - 1, seq.shape[2]), seq.dtype)
+    padded = jnp.concatenate([tail, seq], axis=1)
+    out = sum(padded[:, i:i + seq.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _split_proj(proj, d_inner, G, N, H):
+    z = proj[..., :d_inner]
+    xs = proj[..., d_inner:2 * d_inner]
+    Bv = proj[..., 2 * d_inner:2 * d_inner + G * N]
+    Cv = proj[..., 2 * d_inner + G * N:2 * d_inner + 2 * G * N]
+    dt = proj[..., 2 * d_inner + 2 * G * N:]
+    return z, xs, Bv, Cv, dt
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: SSMConfig,
+                impl: str = "jnp") -> jax.Array:
+    """Full-sequence (train/prefill) Mamba2 block.  x: [B,S,d] -> [B,S,d]."""
+    Bsz, S, d_model = x.shape
+    d_inner, H = ssm_dims(d_model, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xs, Bv, Cv, dt = _split_proj(proj, d_inner, G, N, H)
+
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    xs = conv_out[..., :d_inner].reshape(Bsz, S, H, P)
+    xs = shard(xs, "batch", "seq", "heads", "head_dim")
+    Bv = conv_out[..., d_inner:d_inner + G * N].reshape(Bsz, S, G, N)
+    Cv = conv_out[..., d_inner + G * N:].reshape(Bsz, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    dt = shard(dt, "batch", "seq", "heads")
+    A = -jnp.exp(params["A_log"])
+
+    y, _ = ssd_chunked(xs, dt, A, Bv, Cv, Q=min(cfg.chunk, S), impl=impl)
+    y = shard(y, "batch", "seq", "heads", "head_dim")
+    y = y + xs * params["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = rms_norm(params["gate_norm"], y * jax.nn.silu(z))
+    return jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+
+
+def init_mamba_state(batch: int, d_model: int, cfg: SSMConfig,
+                     dtype=jnp.float32) -> dict:
+    d_inner, H = ssm_dims(d_model, cfg)
+    G, N, P, W = cfg.n_groups, cfg.d_state, cfg.head_dim, cfg.conv_width
+    conv_ch = d_inner + 2 * G * N
+    return {
+        "h": jnp.zeros((batch, H, P, N), dtype),
+        "conv_tail": jnp.zeros((batch, W - 1, conv_ch), DEFAULT_DTYPE),
+    }
+
+
+def mamba_block_step(params: dict, state: dict, x: jax.Array,
+                     cfg: SSMConfig) -> tuple[dict, jax.Array]:
+    """Single-token decode.  x: [B,1,d] -> (new_state, y: [B,1,d])."""
+    Bsz, _, d_model = x.shape
+    d_inner, H = ssm_dims(d_model, cfg)
+    G, N, P = cfg.n_groups, cfg.d_state, cfg.head_dim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xs, Bv, Cv, dt = _split_proj(proj, d_inner, G, N, H)
+
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)        # [B,1,ch]
+    conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
+                            tail=state["conv_tail"])
+    new_tail = jnp.concatenate([state["conv_tail"][:, 1:, :],
+                                conv_in.astype(state["conv_tail"].dtype)],
+                               axis=1)
+    xs = conv_out[..., :d_inner].reshape(Bsz, H, P)
+    Bv = conv_out[..., d_inner:d_inner + G * N].reshape(Bsz, G, N)
+    Cv = conv_out[..., d_inner + G * N:].reshape(Bsz, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"]).reshape(Bsz, H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(A[None, :] * dt)                            # [B,H]
+
+    R = H // G
+    Bh = jnp.repeat(Bv.astype(jnp.float32), R, axis=1)      # [B,H,N]
+    Ch = jnp.repeat(Cv.astype(jnp.float32), R, axis=1)
+
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32), Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h)
+    y = y + xs.astype(jnp.float32) * params["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(params["gate_norm"], y * jax.nn.silu(z))
+    y = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    return {"h": h, "conv_tail": new_tail}, y

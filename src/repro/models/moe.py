@@ -1,0 +1,115 @@
+"""Mixture-of-Experts layer: top-k router with capacity-based dispatch.
+
+GShard-style dense dispatch/combine einsums so that, with tokens sharded on
+the ``data`` axis and experts sharded on the ``model`` axis, XLA SPMD lowers
+the dispatch to all-to-all collectives.  Token-dropping semantics: each
+expert processes at most ``capacity`` tokens per (batch*seq) group; dropped
+assignments fall back to the residual stream (standard capacity-factor
+behaviour, noted in DESIGN.md).
+
+Covers both assigned MoE archs:
+  * dbrx-132b        — 16 experts, top-4, d_ff_expert=10752
+  * qwen3-moe-30b-a3b — 128 experts, top-8, d_ff_expert=768 (fine-grained)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DEFAULT_DTYPE, dense_init
+from repro.sharding.plan import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+
+
+def init_moe(key, d: int, cfg: MoEConfig, dtype=DEFAULT_DTYPE) -> dict:
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, F = cfg.n_experts, cfg.d_ff_expert
+    return {
+        "w_router": dense_init(kr, d, E, jnp.float32),
+        # stacked expert weights: [E, d, F] / [E, F, d]
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, F, dtype))(
+            jax.random.split(kg, E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, F, dtype))(
+            jax.random.split(ku, E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, F, d, dtype))(
+            jax.random.split(kd, E)),
+    }
+
+
+def moe(params: dict, x: jax.Array, cfg: MoEConfig,
+        capacity: Optional[int] = None) -> tuple[jax.Array, dict]:
+    """Apply the MoE layer.  x: [B,S,d] -> (y: [B,S,d], aux_losses).
+
+    Dispatch tensor layout: [B, S, E, C] one-hot over capacity slots.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    if capacity is None:
+        capacity = max(1, int(cfg.capacity_factor * S * K / E))
+    C = capacity
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["w_router"])          # [B,S,E] fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- top-k gating ----------------------------------------------------
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)    # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)      # renormalize over top-k
+
+    # one-hot expert assignment per k-slot: [B,S,K,E]
+    assign = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+
+    # --- capacity: position of each (token,k) within its expert's queue ---
+    # flatten k-slots into the sequence order so earlier tokens win slots
+    flat = assign.reshape(B, S * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat   # [B,S*K,E]
+    pos = jnp.einsum("bte,bte->bt", pos_in_expert, flat).reshape(B, S, K)
+    pos = pos.astype(jnp.int32)
+    keep = (pos < C).astype(jnp.float32)              # token-drop mask
+    gate_vals = gate_vals * keep
+
+    # dispatch/combine tensors [B,S,E,C] — built directly in the activation
+    # dtype: the one-hot dispatch is exact in bf16, and materializing these
+    # S*E*C-sized tensors in f32 dominates MoE transient memory at 32k seq
+    dt = x.dtype
+    pos_oh = jax.nn.one_hot(pos, C, dtype=dt)                # [B,S,K,C]
+    disp = jnp.einsum("bske,bskc->bsec", assign.astype(dt),
+                      pos_oh * keep[..., None].astype(dt))
+    comb = jnp.einsum("bske,bskc,bsk->bsec", assign.astype(dt), pos_oh,
+                      gate_vals.astype(dt))
+
+    # --- expert computation ------------------------------------------------
+    # dispatch: tokens sharded on "batch"/data, experts on "model" — the
+    # becd constraint makes XLA lower dispatch/combine to all-to-alls.
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)                  # [B,E,C,d]
+    xe = shard(xe, "batch", "experts", "capacity", "embed")
+    g = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "experts", "capacity", None)
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])      # [B,E,C,d]
+    ye = shard(ye, "batch", "experts", "capacity", "embed")
+    y = jnp.einsum("bsec,becd->bsd", comb, ye)
+
+    # --- auxiliary losses ---------------------------------------------------
+    # load-balance (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                               # [E]
+    fe = assign.sum(axis=2).mean(axis=(0, 1))                  # [E] frac routed
+    aux = cfg.aux_loss * E * jnp.sum(me * fe)
+    z = cfg.router_z_loss * jnp.mean(
+        jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return y, {"moe_aux": aux, "moe_z": z,
+               "moe_drop_frac": 1.0 - keep.mean()}

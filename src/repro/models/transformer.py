@@ -1,0 +1,593 @@
+"""Model assembly for all assigned architecture families.
+
+Pure-functional: ``init_params`` builds a pytree (layers stacked along a
+leading L axis for ``lax.scan``), and the apply functions thread an optional
+KV/SSM cache for serving.  Three entry points are lowered at scale by the
+dry-run:
+
+  * ``loss_fn``     — training forward + loss          (train_4k)
+  * ``prefill``     — full-prompt forward, builds cache (prefill_32k)
+  * ``decode_step`` — one token against a cache         (decode_32k/long_500k)
+
+Sharding is expressed with logical-axis annotations (``repro.sharding.shard``)
+that no-op outside a plan context, so the same code runs on 1 CPU device and
+on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+from repro.sharding.plan import shard
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _attn_dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+
+
+def n_shared_apps(cfg: ModelConfig) -> int:
+    """Hybrid: number of shared-attention applications."""
+    if cfg.family != "hybrid":
+        return 0
+    return cfg.n_layers // cfg.attn_every
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(k1, cfg.d_model, _attn_dims(cfg),
+                                 cfg.qkv_bias, _dtype(cfg)),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = MOE.init_moe(k2, cfg.d_model, cfg.moe, _dtype(cfg))
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, _dtype(cfg))
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig) -> dict:
+    return {
+        "ln": L.init_rmsnorm(cfg.d_model),
+        "mamba": M.init_mamba_block(key, cfg.d_model, cfg.ssm, _dtype(cfg)),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    V, d = cfg.vocab_padded, cfg.d_model
+    params: dict = {"final_norm": L.init_rmsnorm(d)}
+    if cfg.family == "audio":
+        pass                                  # frames arrive pre-embedded
+    else:
+        params["embed"] = L.embed_init(ke, V, d, _dtype(cfg))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(kh, d, V, _dtype(cfg))
+
+    layer_init = (_init_mamba_layer if cfg.family in ("ssm", "hybrid")
+                  else _init_attn_block)
+    keys = jax.random.split(kl, cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: layer_init(k, cfg))(keys)
+    if cfg.family == "hybrid":
+        params["shared"] = _init_attn_block(ks, cfg)
+    return params
+
+
+def abstract_params(cfg: ModelConfig, key=None) -> dict:
+    """Shape/dtype-only params (no allocation) — used by the dry-run."""
+    if key is None:
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(init_params, cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# Attention block apply (dense / moe / vlm / audio / hybrid-shared)
+# ---------------------------------------------------------------------------
+
+
+def _rope(cfg: ModelConfig, positions):
+    return L.rope_angles(positions, cfg.head_dim, cfg.rope_fraction,
+                         cfg.rope_theta)
+
+
+def _attn_block_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                      positions: jax.Array,
+                      kv_cache: Optional[tuple] = None,
+                      cache_pos: Optional[jax.Array] = None):
+    """One pre-norm attention block.
+
+    Full-sequence mode (kv_cache None): blocked flash-style attention.
+    Decode mode: x is [B,1,d]; read/update (k_cache, v_cache) at cache_pos.
+    Returns (x_out, aux_losses, new_kv) where new_kv is (k, v) — in
+    full-sequence mode the per-layer k/v for cache construction.
+    """
+    B, S, _ = x.shape
+    h = L.rms_norm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = L.attention_proj(p["attn"], h, _attn_dims(cfg))
+    cos, sin = _rope(cfg, positions)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+
+    if kv_cache is None:
+        # note: no "seq" here — under sequence parallelism k/v must stay
+        # whole-sequence per shard for the attention contraction
+        k = shard(k, "batch", None, None, "head_dim")
+        v = shard(v, "batch", None, None, "head_dim")
+        # the CACHE copy accumulated through the prefill scan is seq-sharded
+        # (kv_seq -> model); without this the stacked scan-ys cache is
+        # batch-sharded only and blows per-device memory 16x at 32k prefill
+        if cfg.kv_cache_dtype == "int8" and cfg.family != "hybrid":
+            kq, ksc = L.quantize_kv(k)
+            vq, vsc = L.quantize_kv(v)
+            new_kv = (shard(kq, "batch", "kv_seq", None, "head_dim"),
+                      shard(vq, "batch", "kv_seq", None, "head_dim"),
+                      shard(ksc, "batch", "kv_seq", None),
+                      shard(vsc, "batch", "kv_seq", None))
+        else:
+            new_kv = (shard(k, "batch", "kv_seq", None, "head_dim"),
+                      shard(v, "batch", "kv_seq", None, "head_dim"))
+        ke, ve = L._expand_kv(k, cfg.n_heads), L._expand_kv(v, cfg.n_heads)
+        ke = shard(ke, "batch", "seq", "heads", "head_dim")
+        ve = shard(ve, "batch", "seq", "heads", "head_dim")
+        if cfg.attn_impl == "dense":
+            o = L.dense_attention(q, ke, ve, causal=cfg.causal)
+        elif cfg.attn_impl == "pallas":
+            from repro.kernels.flash_attention import ops as fa_ops
+            o = fa_ops.flash_attention(q, ke, ve, causal=cfg.causal)
+        else:
+            o = L.blocked_attention(q, ke, ve, causal=cfg.causal,
+                                    q_chunk=cfg.q_chunk,
+                                    kv_chunk=cfg.kv_chunk,
+                                    block_skip=cfg.block_skip)
+        o = shard(o, "batch", "seq", "heads", "head_dim")
+    else:
+        # deferred cache commit: attend over the READ-ONLY cache plus the
+        # in-flight token's (k, v); the caller scatters the new entries
+        # into the cache once, after the layer scan (no per-layer cache
+        # copies through the loop carry)
+        if len(kv_cache) == 4:                   # int8 cache + scales
+            k_cache, v_cache, ks_cache, vs_cache = kv_cache
+            o = L.decode_attention(q, k_cache, v_cache, cache_pos,
+                                   k_scale=ks_cache, v_scale=vs_cache,
+                                   extra_kv=(k, v))
+            kq, ksc = L.quantize_kv(k)
+            vq, vsc = L.quantize_kv(v)
+            new_kv = (kq, vq, ksc, vsc)          # [B,1,K,D] / [B,1,K]
+        else:
+            k_cache, v_cache = kv_cache
+            o = L.decode_attention(q, k_cache, v_cache, cache_pos,
+                                   extra_kv=(k, v))
+            new_kv = (k.astype(k_cache.dtype), v.astype(v_cache.dtype))
+
+    x = x + L.attention_out(p["attn"], o)
+    x = shard(x, "batch", "seq", "embed")
+
+    h2 = L.rms_norm(p["ln2"], x, cfg.norm_eps)
+    aux = {}
+    if cfg.family == "moe":
+        y, aux = MOE.moe(p["moe"], h2, cfg.moe)
+    else:
+        y = L.mlp(p["mlp"], h2, cfg.activation)
+    x = x + y
+    x = shard(x, "batch", "seq", "embed")
+    return x, aux, new_kv
+
+
+def _mamba_layer_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+                       state: Optional[dict] = None):
+    """One Mamba2 layer.  Full-seq if state is None, else one-token step."""
+    h = L.rms_norm(p["ln"], x, cfg.norm_eps)
+    if state is None:
+        impl = "pallas" if cfg.attn_impl == "pallas" else "jnp"
+        y = M.mamba_block(p["mamba"], h, cfg.ssm, impl=impl)
+        new_state = None
+    else:
+        new_state, y = M.mamba_block_step(p["mamba"], state, h, cfg.ssm)
+    x = x + y.astype(x.dtype)
+    return shard(x, "batch", "seq", "embed"), new_state
+
+
+# ---------------------------------------------------------------------------
+# Embedding / logits
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    if cfg.family == "audio":
+        x = batch["frames"].astype(_dtype(cfg))
+    else:
+        x = params["embed"][batch["tokens"]]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if cfg.family == "vlm" and "vision_embeds" in batch:
+            ve = batch["vision_embeds"].astype(x.dtype)
+            x = lax.dynamic_update_slice(x, ve, (0, 0, 0))
+    return shard(x, "batch", "seq", "embed")
+
+
+def _logits(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan when cfg.scan_layers (small HLO; XLA cost analysis counts
+    the body once) — otherwise a static unroll (used by the dry-run's cost
+    extrapolation variants, where true per-layer FLOPs must appear in HLO).
+    """
+    if cfg.scan_layers:
+        return lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _scan_blocks(cfg: ModelConfig, stacked: dict, x: jax.Array,
+                 positions: jax.Array, collect_kv: bool):
+    """Run attention blocks over the stacked layer params."""
+    def body(carry, layer_p):
+        xc, aux_sum = carry
+        xo, aux, kv = _attn_block_apply(cfg, layer_p, xc, positions)
+        aux_v = sum(aux.get(k, 0.0) for k in ("moe_aux", "moe_z"))
+        ys = kv if collect_kv else None
+        return (xo, aux_sum + aux_v), ys
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (x, aux), kvs = _maybe_scan(cfg, body, (x, 0.0), stacked["layers"])
+    return x, aux, kvs
+
+
+def _scan_mamba(cfg: ModelConfig, params: dict, x: jax.Array,
+                positions: jax.Array, collect_kv: bool):
+    """SSM / hybrid full-sequence pass."""
+    def body(xc, layer_p):
+        xo, _ = _mamba_layer_apply(cfg, layer_p, xc)
+        return xo, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+
+    if cfg.family == "ssm":
+        x, _ = _maybe_scan(cfg, body, x, params["layers"])
+        return x, 0.0, None
+
+    # hybrid: segments of ``attn_every`` mamba layers + shared attn block
+    k = cfg.attn_every
+    napps = n_shared_apps(cfg)
+    shared_kvs = []
+    done = 0
+
+    def shared_apply(xx, sp):
+        return _attn_block_apply(cfg, sp, xx, positions)[0]
+    if cfg.remat == "block":
+        # without this each shared-attn application keeps its full
+        # attention internals live across the whole backward pass
+        shared_apply = jax.checkpoint(shared_apply)
+
+    for a in range(napps):
+        seg = jax.tree.map(lambda t: t[done:done + k], params["layers"])
+        x, _ = _maybe_scan(cfg, body, x, seg)
+        if collect_kv:
+            x, _, kv = _attn_block_apply(cfg, params["shared"], x,
+                                         positions)
+            shared_kvs.append(kv)
+        else:
+            x = shared_apply(x, params["shared"])
+        done += k
+    if done < cfg.n_layers:
+        seg = jax.tree.map(lambda t: t[done:], params["layers"])
+        x, _ = _maybe_scan(cfg, body, x, seg)
+    kvs = (jax.tree.map(lambda *xs: jnp.stack(xs), *shared_kvs)
+           if collect_kv else None)
+    return x, 0.0, kvs
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict,
+            collect_kv: bool = False):
+    """Full-sequence forward.  Returns (logits, aux, kvs)."""
+    x = _embed(cfg, params, batch)
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    if cfg.family in ("ssm", "hybrid"):
+        x, aux, kvs = _scan_mamba(cfg, params, x, positions, collect_kv)
+    else:
+        x, aux, kvs = _scan_blocks(cfg, params, x, positions, collect_kv)
+    return _logits(cfg, params, x), aux, kvs
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    """Cross-entropy LM loss; labels == -1 are masked (prefix/pad)."""
+    logits, aux, _ = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lbl = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux, {"loss": loss, "aux": aux,
+                        "tokens": mask.sum()}
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> dict:
+    """Allocate an empty serving cache for ``batch_size`` sequences."""
+    assert cfg.has_decode, f"{cfg.name} is encoder-only"
+    dt = _dtype(cfg)
+    cache: dict = {"pos": jnp.zeros((batch_size,), jnp.int32)}
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner, H = M.ssm_dims(cfg.d_model, s)
+        conv_ch = d_inner + 2 * s.n_groups * s.d_state
+        Lc = cfg.n_layers
+        cache["ssm_h"] = jnp.zeros(
+            (Lc, batch_size, H, s.head_dim, s.d_state), jnp.float32)
+        cache["conv_tail"] = jnp.zeros(
+            (Lc, batch_size, s.conv_width - 1, conv_ch), dt)
+    if cfg.family != "ssm":
+        nl = n_shared_apps(cfg) if cfg.family == "hybrid" else cfg.n_layers
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        if cfg.kv_cache_dtype == "int8" and cfg.family != "hybrid":
+            cache["k"] = jnp.zeros((nl, batch_size, max_len, K, hd),
+                                   jnp.int8)
+            cache["v"] = jnp.zeros((nl, batch_size, max_len, K, hd),
+                                   jnp.int8)
+            cache["k_scale"] = jnp.zeros((nl, batch_size, max_len, K),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((nl, batch_size, max_len, K),
+                                         jnp.float32)
+        else:
+            cache["k"] = jnp.zeros((nl, batch_size, max_len, K, hd), dt)
+            cache["v"] = jnp.zeros((nl, batch_size, max_len, K, hd), dt)
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, max_len: int):
+    """Process the full prompt; returns (cache, last-position logits).
+
+    All sequences in the batch share the prompt length S (padded serving
+    uses per-slot engines; see repro.serving).
+    """
+    tokens = batch["tokens"] if "tokens" in batch else batch["frames"]
+    B, S = tokens.shape[:2]
+    x = _embed(cfg, params, batch)
+    positions = jnp.arange(S)[None, :]
+
+    cache = init_cache(cfg, B, max_len)
+    cache["pos"] = jnp.full((B,), S, jnp.int32)
+
+    if cfg.family in ("ssm", "hybrid"):
+        # re-run scan collecting final ssm states per layer
+        def body(carry, layer_p):
+            xc = carry
+            h = L.rms_norm(layer_p["ln"], xc, cfg.norm_eps)
+            y, st = _mamba_prefill_states(cfg, layer_p["mamba"], h)
+            return xc + y.astype(xc.dtype), st
+        if cfg.family == "ssm":
+            x, states = _maybe_scan(cfg, body, x, params["layers"])
+            cache["ssm_h"] = states["h"]
+            cache["conv_tail"] = states["conv_tail"]
+        else:
+            k = cfg.attn_every
+            napps = n_shared_apps(cfg)
+            hs, tails, kvs = [], [], []
+            done = 0
+            segs = [k] * napps + ([cfg.n_layers - k * napps]
+                                  if cfg.n_layers % k else [])
+            for si, seglen in enumerate(segs):
+                seg = jax.tree.map(lambda t: t[done:done + seglen],
+                                   params["layers"])
+                x, st = _maybe_scan(cfg, body, x, seg)
+                hs.append(st["h"])
+                tails.append(st["conv_tail"])
+                if si < napps:
+                    x, _, kv = _attn_block_apply(cfg, params["shared"], x,
+                                                 positions)
+                    kvs.append(kv)
+                done += seglen
+            cache["ssm_h"] = jnp.concatenate(hs, axis=0)
+            cache["conv_tail"] = jnp.concatenate(tails, axis=0)
+            kstack = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+            _store_kv(cache, kstack, max_len)
+    else:
+        x, _, kvs = _scan_blocks(cfg, params, x, positions, collect_kv=True)
+        _store_kv(cache, kvs, max_len)
+
+    logits = _logits(cfg, params, x[:, -1:, :])
+    return cache, logits
+
+
+def _store_kv(cache: dict, kvs: tuple, max_len: int):
+    """Write stacked per-layer kv (2-tuple) or int8 kv+scales (4-tuple)
+    into the cache dict, padding the seq axis (2) up to max_len."""
+    def pad(x):
+        S = x.shape[2]
+        if S == max_len:
+            return x
+        p = [(0, 0)] * x.ndim
+        p[2] = (0, max_len - S)
+        return jnp.pad(x, p)
+    keys = ("k", "v") if len(kvs) == 2 else ("k", "v", "k_scale", "v_scale")
+    for key, val in zip(keys, kvs):
+        cache[key] = pad(val)
+
+
+def _mamba_prefill_states(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Mamba block forward that also returns the decode state."""
+    s = cfg.ssm
+    Bsz, S, d_model = x.shape
+    d_inner, H = M.ssm_dims(d_model, s)
+    G, N = s.n_groups, s.d_state
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xs, Bv, Cv, dt = M._split_proj(proj, d_inner, G, N, H)
+    conv_in = jnp.concatenate([xs, Bv, Cv], axis=-1)
+    W = s.conv_width
+    conv_tail = conv_in[:, S - (W - 1):, :] if S >= W - 1 else jnp.pad(
+        conv_in, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    conv_out = M._causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xs = conv_out[..., :d_inner].reshape(Bsz, S, H, s.head_dim)
+    xs = shard(xs, "batch", "seq", "heads", "head_dim")
+    Bv = conv_out[..., d_inner:d_inner + G * N].reshape(Bsz, S, G, N)
+    Cv = conv_out[..., d_inner + G * N:].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = shard(dt, "batch", "seq", "heads")
+    A = -jnp.exp(p["A_log"])
+    y, h_final = M.ssd_chunked(xs, dt, A, Bv, Cv, Q=min(s.chunk, S))
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_inner)
+    y = L.rms_norm(p["gate_norm"], y * jax.nn.silu(z))
+    y = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return y, {"h": h_final, "conv_tail": conv_tail.astype(_dtype(cfg))}
+
+
+def _commit_kv(cache_arr: jax.Array, new_vals: jax.Array,
+               pos: jax.Array) -> jax.Array:
+    """Scatter per-layer new kv entries into the cache at per-seq ``pos``.
+
+    cache_arr: [L,B,Smax,...]; new_vals: [L,B,1,...]; pos: [B].
+    """
+    def per_seq(c, n, p):                       # [L,Smax,...],[L,1,...]
+        return lax.dynamic_update_slice_in_dim(c, n.astype(c.dtype), p,
+                                               axis=1)
+    return jax.vmap(per_seq, in_axes=(1, 1, 0), out_axes=1)(
+        cache_arr, new_vals, pos)
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, active: Optional[jax.Array] = None):
+    """One decode step.  tokens: [B] or [B,1] -> (new_cache, logits [B,1,V]).
+
+    ``active`` ([B] bool) supports continuous batching: inactive slots do
+    not advance (their SSM state and cache position are preserved; the
+    garbage KV written at their frozen position is overwritten when the
+    slot resumes, so attention never reads it).
+    """
+    assert cfg.has_decode
+    if tokens.ndim == 1:
+        tokens = tokens[:, None]
+    pos = cache["pos"]                         # [B]
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    positions = pos[:, None]
+
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "moe", "vlm"):
+        int8 = "k_scale" in cache
+        kv_keys = ("k", "v", "k_scale", "v_scale") if int8 else ("k", "v")
+
+        def body(xc, xs_in):
+            layer_p = xs_in[0]
+            xo, _, new_kv = _attn_block_apply(
+                cfg, layer_p, xc, positions, kv_cache=tuple(xs_in[1:]),
+                cache_pos=pos)
+            return xo, new_kv
+        x, new_kvs = _maybe_scan(
+            cfg, body, x,
+            (params["layers"],) + tuple(cache[k] for k in kv_keys))
+        # commit: one batched scatter of all layers' new entries at pos
+        for key, val in zip(kv_keys, new_kvs):
+            new_cache[key] = _commit_kv(cache[key], val, pos)
+    else:
+        def mbody(xc, xs_in):
+            layer_p, h, tail = xs_in
+            hpre = L.rms_norm(layer_p["ln"], xc, cfg.norm_eps)
+            st, y = M.mamba_block_step(layer_p["mamba"],
+                                       {"h": h, "conv_tail": tail},
+                                       hpre, cfg.ssm)
+            return xc + y.astype(xc.dtype), (st["h"], st["conv_tail"])
+        if cfg.family == "ssm":
+            x, (hs, tails) = _maybe_scan(
+                cfg, mbody, x, (params["layers"], cache["ssm_h"],
+                           cache["conv_tail"]))
+            new_cache["ssm_h"], new_cache["conv_tail"] = hs, tails
+        else:
+            k = cfg.attn_every
+            napps = n_shared_apps(cfg)
+            hs, tails, ks, vs = [], [], [], []
+            done = 0
+            segs = [k] * napps + ([cfg.n_layers - k * napps]
+                                  if cfg.n_layers % k else [])
+            for si, seglen in enumerate(segs):
+                seg = jax.tree.map(lambda t: t[done:done + seglen],
+                                   params["layers"])
+                segh = cache["ssm_h"][done:done + seglen]
+                segt = cache["conv_tail"][done:done + seglen]
+                x, (h2, t2) = _maybe_scan(cfg, mbody, x, (seg, segh, segt))
+                hs.append(h2)
+                tails.append(t2)
+                if si < napps:
+                    x, _, (k2, v2) = _attn_block_apply(
+                        cfg, params["shared"], x, positions,
+                        kv_cache=(cache["k"][si], cache["v"][si]),
+                        cache_pos=pos)
+                    ks.append(k2)
+                    vs.append(v2)
+                done += seglen
+            new_cache["ssm_h"] = jnp.concatenate(hs, axis=0)
+            new_cache["conv_tail"] = jnp.concatenate(tails, axis=0)
+            # deferred commit of the shared-attn block's new kv entries
+            new_cache["k"] = _commit_kv(cache["k"], jnp.stack(ks), pos)
+            new_cache["v"] = _commit_kv(cache["v"], jnp.stack(vs), pos)
+
+    if active is None:
+        new_cache["pos"] = pos + 1
+    else:
+        act = active.astype(jnp.int32)
+        new_cache["pos"] = pos + act
+        # freeze recurrent state of inactive slots (KV writes are harmless:
+        # a frozen slot's position is rewritten with real k/v on resume)
+        for key in ("ssm_h", "conv_tail"):
+            if key in cache:
+                sel = active.reshape((1, -1) + (1,) * (cache[key].ndim - 2))
+                new_cache[key] = jnp.where(sel, new_cache[key], cache[key])
+    logits = _logits(cfg, params, x)
+    return new_cache, logits

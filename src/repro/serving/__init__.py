@@ -1,0 +1,7 @@
+from repro.serving.engine import Engine, EngineConfig, summarize
+from repro.serving.request import Request
+from repro.serving.router import Router
+from repro.serving.schedulers import make_scheduler
+
+__all__ = ["Engine", "EngineConfig", "Request", "Router", "make_scheduler",
+           "summarize"]

@@ -1,0 +1,221 @@
+"""Continuous-batching serving engine with pluggable (SFS/CFS/FIFO/SRTF)
+lane scheduling — the paper's technique as a first-class serving feature.
+
+One engine tick = one gang-scheduled ``decode_step`` over the slot batch
+(the TPU analogue of an OS scheduling tick).  The scheduler picks which
+slots are *active* each tick; a requests's first tick runs its prefill
+(builds its KV/SSM cache slot).  Per-request accounting (turnaround,
+service ticks, RTE, lane reassignments) mirrors the paper's metrics so the
+serving results are directly comparable with the discrete-event simulator
+in ``repro.core``.
+
+``model=None`` runs the engine in synthetic mode (no JAX calls): identical
+scheduling behaviour, used for large-workload scheduler benchmarks; with a
+model, every tick executes the real jitted step (used in tests/examples).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving.request import Request
+from repro.serving.schedulers import Scheduler, make_scheduler
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    lanes: int = 4                   # concurrent decode lanes ("cores")
+    n_slots: int = 16                # resident cache slots
+    max_len: int = 256               # cache capacity per slot
+    policy: str = "sfs"
+    sched_kw: dict = dataclasses.field(default_factory=dict)
+
+
+class Engine:
+    def __init__(self, ecfg: EngineConfig, model_cfg: Optional[ModelConfig]
+                 = None, params: Optional[dict] = None):
+        self.ecfg = ecfg
+        self.cfg = model_cfg
+        self.params = params
+        self.scheduler: Scheduler = make_scheduler(
+            ecfg.policy, ecfg.lanes, **ecfg.sched_kw)
+        self.t = 0
+        self.free_slots = list(range(ecfg.n_slots))
+        self.pending_slot: list[Request] = []    # admitted but no slot yet
+        self.by_slot: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.next_token: dict[int, int] = {}     # rid -> pending input token
+        self.lane_busy_ticks = 0
+        self.tick_log: list[tuple[int, int, int]] = []  # (t, n_active, qlen)
+
+        if model_cfg is not None:
+            assert params is not None
+            self.cache = T.init_cache(model_cfg, ecfg.n_slots, ecfg.max_len)
+            self._decode = jax.jit(partial(T.decode_step, model_cfg),
+                                   donate_argnums=(1,))
+            self._prefill = jax.jit(
+                lambda p, toks: T.prefill(model_cfg, p, {"tokens": toks},
+                                          ecfg.max_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, prompt_tokens: Optional[np.ndarray]
+               = None):
+        req._prompt = (np.asarray(prompt_tokens)
+                       if prompt_tokens is not None else None)
+        if self.free_slots:
+            req.slot = self.free_slots.pop()
+            self.by_slot[req.slot] = req
+            self.scheduler.on_arrival(req, self.t)
+        else:
+            self.pending_slot.append(req)
+
+    def _admit_pending(self):
+        while self.free_slots and self.pending_slot:
+            req = self.pending_slot.pop(0)
+            req.slot = self.free_slots.pop()
+            self.by_slot[req.slot] = req
+            self.scheduler.on_arrival(req, self.t)
+
+    # ------------------------------------------------------------------
+    def _run_prefill(self, req: Request):
+        """Build this request's cache slot from its prompt (one tick)."""
+        if self.cfg is None:
+            return
+        toks = req._prompt
+        if toks is None:
+            toks = np.zeros((req.prompt_len,), np.int32)
+        cache1, logits = self._prefill(self.params, toks[None, :])
+        # scatter the single-sequence cache into this slot
+        slot = req.slot
+        new_cache = {}
+        for k, v in self.cache.items():
+            one = cache1[k]
+            if k == "pos":                       # [B]
+                new_cache[k] = v.at[slot].set(one[0])
+            else:                                # [L, B, ...]
+                new_cache[k] = v.at[:, slot].set(one[:, 0].astype(v.dtype))
+        self.cache = new_cache
+        self.next_token[req.rid] = int(jnp.argmax(logits[0, -1]))
+
+    def _run_decode(self, reqs: Sequence[Request]):
+        if self.cfg is None or not reqs:
+            return {}
+        B = self.ecfg.n_slots
+        active = np.zeros((B,), bool)
+        tokens = np.zeros((B,), np.int32)
+        for r in reqs:
+            active[r.slot] = True
+            tokens[r.slot] = self.next_token.get(r.rid, 0)
+        self.cache, logits = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(active))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1))
+        return {r.rid: int(nxt[r.slot]) for r in reqs}
+
+    # ------------------------------------------------------------------
+    def tick(self, arrivals: Sequence[Request] = ()):
+        """Advance one engine tick."""
+        t = self.t
+        for req in arrivals:
+            self.submit(req, getattr(req, "_prompt", None))
+        self._admit_pending()
+
+        # wake stalled requests
+        for r in list(self.by_slot.values()):
+            if r.stall_until == t:
+                r.stall_until = -1
+                self.scheduler.on_wake(r.rid, t)
+
+        chosen = self.scheduler.select(t)
+        chosen_reqs = [self.scheduler.reqs[rid] for rid in chosen]
+
+        prefills = [r for r in chosen_reqs if not r.prefill_done]
+        decodes = [r for r in chosen_reqs if r.prefill_done]
+
+        for r in prefills:
+            self._run_prefill(r)
+            r.prefill_done = True
+
+        toks = self._run_decode(decodes)
+        for r in decodes:
+            r.tokens_done += 1
+            if r.rid in toks:
+                self.next_token[r.rid] = toks[r.rid]
+
+        self.lane_busy_ticks += len(chosen_reqs)
+        self.tick_log.append((t, len(chosen_reqs),
+                              len(getattr(self.scheduler, "queue", ()))))
+
+        # end-of-tick bookkeeping: finish / stall / slice accounting
+        for r in chosen_reqs:
+            fin = r.done
+            self.scheduler.on_tick_end(r.rid, t, fin)
+            if fin:
+                r.finish = t + 1
+                self.finished.append(r)
+                self.free_slots.append(r.slot)
+                del self.by_slot[r.slot]
+                r.slot = None
+                self.next_token.pop(r.rid, None)
+            elif (r.stall_idx < len(r.stall_events)
+                  and r.tokens_done >= r.stall_events[r.stall_idx][0]
+                  and r.prefill_done):
+                dur = r.stall_events[r.stall_idx][1]
+                r.stall_idx += 1
+                r.stall_until = t + 1 + dur
+                self.scheduler.on_stall(r.rid, t)
+        self.t += 1
+
+    def run(self, workload: Sequence[Request], max_ticks: int = 1_000_000,
+            prompts: Optional[dict] = None) -> list[Request]:
+        """Drive the engine over a workload (requests sorted by arrival)."""
+        workload = sorted(workload, key=lambda r: r.arrival)
+        i = 0
+        n = len(workload)
+        while len(self.finished) < n:
+            if self.t > max_ticks:
+                raise RuntimeError(f"exceeded {max_ticks} ticks "
+                                   f"({len(self.finished)}/{n} done)")
+            arrivals = []
+            while i < n and workload[i].arrival <= self.t:
+                r = workload[i]
+                if prompts is not None and r.rid in prompts:
+                    r._prompt = np.asarray(prompts[r.rid])
+                arrivals.append(r)
+                i += 1
+            self.tick(arrivals)
+        return sorted(self.finished, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# Result metrics (mirrors repro.core.metrics for cross-validation)
+# ---------------------------------------------------------------------------
+
+
+def turnarounds(reqs: Sequence[Request]) -> np.ndarray:
+    return np.array([r.turnaround for r in reqs], dtype=np.float64)
+
+
+def rtes(reqs: Sequence[Request]) -> np.ndarray:
+    return np.array([r.rte for r in reqs], dtype=np.float64)
+
+
+def summarize(reqs: Sequence[Request]) -> dict:
+    ta = turnarounds(reqs)
+    return {
+        "n": len(reqs),
+        "mean_turnaround": float(ta.mean()),
+        "median_turnaround": float(np.median(ta)),
+        "p99_turnaround": float(np.percentile(ta, 99)),
+        "mean_rte": float(rtes(reqs).mean()),
+        "frac_rte_095": float((rtes(reqs) >= 0.95).mean()),
+        "total_ctx": int(sum(r.n_ctx for r in reqs)),
+        "demoted_frac": float(np.mean([r.demoted for r in reqs])),
+    }

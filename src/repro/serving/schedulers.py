@@ -1,0 +1,308 @@
+"""Lane schedulers for the serving engine — the paper's policies on TPU.
+
+The hardware adaptation (DESIGN.md §2): a "CPU core" becomes a **lane** of
+the continuously-batched decode step; "context switch" becomes a lane
+reassignment (batch re-formation / cache-slot swap); the time slice is
+measured in engine ticks (≙ decode tokens).  Policies:
+
+  sfs  — the paper: FILTER lanes (run-to-completion up to an adaptive slice
+         S = mean-IAT x lanes, recomputed every N arrivals), demotion to a
+         fair-share (CFS-like) pool, transient-overload bypass (delay >=
+         O x S), stall-aware parking (the I/O handling of §V-D).
+  cfs  — fair share: every runnable request accrues vruntime; each tick the
+         ``lanes`` smallest-vruntime requests run.
+  fifo — non-preemptive: a lane keeps its request to completion.
+  srtf — oracle: smallest remaining demand first (preemptive).
+
+Every scheduler exposes: on_arrival / select / on_tick_end / on_stall /
+on_wake.  ``select(t)`` returns the rids to run this tick (<= lanes).
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Optional
+
+from repro.serving.request import Request
+
+
+class Scheduler:
+    name = "base"
+
+    def __init__(self, lanes: int):
+        self.lanes = lanes
+        self.reqs: dict[int, Request] = {}
+
+    def on_arrival(self, req: Request, t: int):
+        raise NotImplementedError
+
+    def select(self, t: int) -> list[int]:
+        raise NotImplementedError
+
+    def on_tick_end(self, rid: int, t: int, finished: bool):
+        raise NotImplementedError
+
+    def on_stall(self, rid: int, t: int):
+        pass
+
+    def on_wake(self, rid: int, t: int):
+        pass
+
+    # -- shared helpers ------------------------------------------------------
+    def _charge(self, rid: int):
+        self.reqs[rid].served_ticks += 1
+
+
+class FIFOScheduler(Scheduler):
+    name = "fifo"
+
+    def __init__(self, lanes: int):
+        super().__init__(lanes)
+        self.queue: deque[int] = deque()
+        self.running: list[int] = []
+
+    def on_arrival(self, req: Request, t: int):
+        self.reqs[req.rid] = req
+        req.queue_enter = t
+        self.queue.append(req.rid)
+
+    def select(self, t: int) -> list[int]:
+        while len(self.running) < self.lanes and self.queue:
+            rid = self.queue.popleft()
+            r = self.reqs[rid]
+            r.queue_delay += t - r.queue_enter
+            if r.first_start is None:
+                r.first_start = t
+            self.running.append(rid)
+        return list(self.running)
+
+    def on_tick_end(self, rid: int, t: int, finished: bool):
+        self._charge(rid)
+        if finished:
+            self.running.remove(rid)
+
+    def on_stall(self, rid: int, t: int):
+        if rid in self.running:
+            self.running.remove(rid)
+            self.reqs[rid].n_ctx += 1
+
+    def on_wake(self, rid: int, t: int):
+        self.reqs[rid].queue_enter = t
+        self.queue.append(rid)
+
+
+class CFSScheduler(Scheduler):
+    """Fair share: run the ``lanes`` runnable requests with min vruntime."""
+    name = "cfs"
+
+    def __init__(self, lanes: int):
+        super().__init__(lanes)
+        self.runnable: set[int] = set()
+        self.min_vruntime = 0.0
+        self._last: list[int] = []
+
+    def on_arrival(self, req: Request, t: int):
+        self.reqs[req.rid] = req
+        req.queue_enter = t
+        req.vruntime = self.min_vruntime
+        self.runnable.add(req.rid)
+
+    def select(self, t: int) -> list[int]:
+        order = sorted(self.runnable,
+                       key=lambda rid: (self.reqs[rid].vruntime, rid))
+        chosen = order[:self.lanes]
+        for rid in chosen:
+            r = self.reqs[rid]
+            if r.first_start is None:
+                r.first_start = t
+                r.queue_delay += t - r.queue_enter
+        # context switch accounting: a request that ran last tick but was
+        # displaced this tick was preempted (lane re-formation)
+        displaced = set(self._last) - set(chosen)
+        for rid in displaced:
+            if rid in self.runnable:
+                self.reqs[rid].n_ctx += 1
+        self._last = chosen
+        return chosen
+
+    def on_tick_end(self, rid: int, t: int, finished: bool):
+        self._charge(rid)
+        r = self.reqs[rid]
+        r.vruntime += 1.0
+        self.min_vruntime = max(self.min_vruntime,
+                                min((self.reqs[x].vruntime
+                                     for x in self.runnable), default=0.0))
+        if finished:
+            self.runnable.discard(rid)
+
+    def on_stall(self, rid: int, t: int):
+        self.runnable.discard(rid)
+        self.reqs[rid].n_ctx += 1
+
+    def on_wake(self, rid: int, t: int):
+        r = self.reqs[rid]
+        r.vruntime = max(r.vruntime, self.min_vruntime)
+        self.runnable.add(rid)
+
+
+class SRTFScheduler(Scheduler):
+    """Offline oracle: preemptive shortest-remaining-demand-first."""
+    name = "srtf"
+
+    def __init__(self, lanes: int):
+        super().__init__(lanes)
+        self.runnable: set[int] = set()
+        self._last: list[int] = []
+
+    def on_arrival(self, req: Request, t: int):
+        self.reqs[req.rid] = req
+        req.queue_enter = t
+        self.runnable.add(req.rid)
+
+    def select(self, t: int) -> list[int]:
+        order = sorted(self.runnable,
+                       key=lambda rid: (self.reqs[rid].remaining(), rid))
+        chosen = order[:self.lanes]
+        for rid in chosen:
+            r = self.reqs[rid]
+            if r.first_start is None:
+                r.first_start = t
+                r.queue_delay += t - r.queue_enter
+        for rid in set(self._last) - set(chosen):
+            if rid in self.runnable:
+                self.reqs[rid].n_ctx += 1
+        self._last = chosen
+        return chosen
+
+    def on_tick_end(self, rid: int, t: int, finished: bool):
+        self._charge(rid)
+        if finished:
+            self.runnable.discard(rid)
+
+    def on_stall(self, rid: int, t: int):
+        self.runnable.discard(rid)
+        self.reqs[rid].n_ctx += 1
+
+    def on_wake(self, rid: int, t: int):
+        self.runnable.add(rid)
+
+
+class SFSScheduler(Scheduler):
+    """The paper's scheduler, adapted to decode lanes (DESIGN.md §2).
+
+    Two levels: a FILTER pool of ``lanes`` worker lanes consuming a global
+    FIFO queue with a per-request slice of S ticks (S = mean-IAT * lanes
+    over the last N arrivals), and a CFS pool (fair share) for demoted
+    requests, which soaks up any lanes the FILTER pool leaves idle —
+    work conservation exactly as in the paper.
+    """
+    name = "sfs"
+
+    def __init__(self, lanes: int, *, slice_ticks: Optional[int] = None,
+                 adaptive_window: int = 100, slice_init: int = 32,
+                 overload_factor: Optional[float] = 3.0,
+                 stall_aware: bool = True):
+        super().__init__(lanes)
+        self.queue: deque[int] = deque()        # global FILTER queue
+        self.filter_running: list[int] = []
+        self.cfs = CFSScheduler(lanes)          # nested fair-share pool
+        self.cfs.reqs = self.reqs
+        self.fixed_slice = slice_ticks
+        self.S = slice_ticks if slice_ticks is not None else slice_init
+        self.window = adaptive_window
+        self.overload_factor = overload_factor
+        self.stall_aware = stall_aware
+        self._iats: deque[int] = deque(maxlen=adaptive_window)
+        self._last_arrival: Optional[int] = None
+        self._since_update = 0
+        self.slice_timeline: list[tuple[int, int]] = [(0, self.S)]
+        self.overload_bypasses = 0
+
+    # -- adaptive S (paper §V-C) --------------------------------------------
+    def _observe(self, t: int):
+        if self.fixed_slice is not None:
+            return
+        if self._last_arrival is not None:
+            self._iats.append(t - self._last_arrival)
+        self._last_arrival = t
+        self._since_update += 1
+        if (self._since_update >= self.window
+                and len(self._iats) == self.window):
+            mean_iat = sum(self._iats) / len(self._iats)
+            self.S = max(1, int(round(mean_iat * self.lanes)))
+            self._since_update = 0
+            self.slice_timeline.append((t, self.S))
+
+    def on_arrival(self, req: Request, t: int):
+        self.reqs[req.rid] = req
+        self._observe(t)
+        req.queue_enter = t
+        self.queue.append(req.rid)
+
+    def select(self, t: int) -> list[int]:
+        # 1) fill FILTER lanes from the global queue
+        while len(self.filter_running) < self.lanes and self.queue:
+            rid = self.queue.popleft()
+            r = self.reqs[rid]
+            delay = t - r.queue_enter
+            r.queue_delay += delay
+            if r.first_start is None:
+                r.first_start = t
+            # §V-E transient overload: bypass FILTER, go straight to CFS
+            if (self.overload_factor is not None
+                    and delay >= self.overload_factor * self.S):
+                self.overload_bypasses += 1
+                r.demoted = True
+                self.cfs.runnable.add(rid)
+                r.vruntime = self.cfs.min_vruntime
+                continue
+            if r.slice_left is None or r.slice_left <= 0:
+                r.slice_left = self.S
+            self.filter_running.append(rid)
+        # 2) leftover lanes run the CFS pool (work conservation)
+        free = self.lanes - len(self.filter_running)
+        self.cfs.lanes = free
+        cfs_chosen = self.cfs.select(t) if free > 0 else []
+        return list(self.filter_running) + cfs_chosen
+
+    def on_tick_end(self, rid: int, t: int, finished: bool):
+        r = self.reqs[rid]
+        if rid in self.filter_running:
+            self._charge(rid)
+            r.slice_left -= 1
+            if finished:
+                self.filter_running.remove(rid)
+            elif r.slice_left <= 0:              # 4.2: demote to CFS
+                self.filter_running.remove(rid)
+                r.n_ctx += 1
+                r.demoted = True
+                r.vruntime = self.cfs.min_vruntime
+                self.cfs.runnable.add(rid)
+        else:
+            self.cfs.on_tick_end(rid, t, finished)
+
+    def on_stall(self, rid: int, t: int):
+        r = self.reqs[rid]
+        if rid in self.filter_running:
+            # §V-D: park it, keep the unused slice, re-enqueue on wake
+            self.filter_running.remove(rid)
+            r.n_ctx += 1
+            if not self.stall_aware:
+                # ablation: slice keeps burning while stalled
+                r.slice_left = 0
+        else:
+            self.cfs.on_stall(rid, t)
+
+    def on_wake(self, rid: int, t: int):
+        r = self.reqs[rid]
+        if r.demoted:
+            self.cfs.on_wake(rid, t)
+        else:
+            r.queue_enter = t
+            self.queue.append(rid)
+
+
+def make_scheduler(policy: str, lanes: int, **kw) -> Scheduler:
+    cls = {"sfs": SFSScheduler, "cfs": CFSScheduler, "fifo": FIFOScheduler,
+           "srtf": SRTFScheduler}[policy]
+    return cls(lanes, **kw)

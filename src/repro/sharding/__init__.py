@@ -1,0 +1,5 @@
+from repro.sharding.plan import (Plan, current_plan, param_shardings,
+                                 param_specs, shard, use_plan)
+
+__all__ = ["Plan", "current_plan", "param_shardings", "param_specs",
+           "shard", "use_plan"]

@@ -1,0 +1,187 @@
+"""Logical-axis sharding plan over the production mesh ("pod","data","model").
+
+Models annotate activations with *logical* axis names via ``shard(x, ...)``;
+parameters get PartitionSpecs from path-based rules in ``param_specs``.  The
+plan maps logical names to whatever mesh axes actually exist, so the same
+model code runs unsharded on 1 CPU device, on the single-pod (data, model)
+mesh, and on the multi-pod (pod, data, model) mesh.
+
+Rules (defaults — per-arch overrides via ``Plan(rules={...})``):
+
+  batch   -> ("pod", "data")      activations' batch dim
+  heads   -> "model"              attention heads / q features
+  kv_seq  -> "model"              decode-time KV-cache sequence dim
+  ff      -> "model"              MLP hidden
+  experts -> "model"              MoE expert dim
+  vocab   -> "model"              embedding/logits vocab dim
+  fsdp    -> "data"               ZeRO-3 weight sharding (if cfg.fsdp)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Optional, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, tuple]
+
+DEFAULT_RULES: dict[str, Axes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_seq": "model",
+    "head_dim": None,
+    "ff": "model",
+    "experts": "model",
+    "capacity": None,
+    "vocab": "model",
+    "layers": None,
+    "state": None,
+    "fsdp": "data",
+}
+
+
+@dataclasses.dataclass
+class Plan:
+    mesh: Mesh
+    fsdp: bool = False
+    rules: dict = dataclasses.field(default_factory=dict)
+
+    def _resolve(self, logical: str) -> Axes:
+        rules = {**DEFAULT_RULES, **self.rules}
+        ax = rules.get(logical, None)
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            ax = (ax,)
+        present = tuple(a for a in ax if a in self.mesh.axis_names)
+        if not present:
+            return None
+        return present if len(present) > 1 else present[0]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """Resolve logical axes; a mesh axis may appear only once per spec —
+        later conflicting dims fall back to replication (t5x-rule style).
+        E.g. with sequence parallelism (seq->model) the logits spec
+        ("batch","seq","vocab") keeps vocab on model and replicates seq."""
+        used: set = set()
+        out = []
+        # reverse priority: the *last* dims (features/vocab/heads) win, the
+        # earlier dims (seq) yield — feature sharding is the hot one.
+        resolved = [self._resolve(l) if l else None for l in logical]
+        for ax in reversed(resolved):
+            axes = (ax,) if isinstance(ax, str) else (ax or ())
+            if any(a in used for a in axes):
+                out.append(None)
+            else:
+                used.update(axes)
+                out.append(ax)
+        return P(*reversed(out))
+
+    def sharding(self, *logical: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def constrain(self, x: jax.Array, logical: tuple) -> jax.Array:
+        if len(logical) != x.ndim:
+            raise ValueError(f"{logical} rank != array rank {x.shape}")
+        return jax.lax.with_sharding_constraint(x, self.sharding(*logical))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[Plan]] = contextvars.ContextVar(
+    "repro_sharding_plan", default=None)
+
+
+@contextlib.contextmanager
+def use_plan(plan: Optional[Plan]):
+    tok = _ACTIVE.set(plan)
+    try:
+        yield plan
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def current_plan() -> Optional[Plan]:
+    return _ACTIVE.get()
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Annotate activation ``x`` with logical axes; no-op without a plan."""
+    plan = _ACTIVE.get()
+    if plan is None:
+        return x
+    return plan.constrain(x, logical)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs: path-based rules
+# ---------------------------------------------------------------------------
+
+# (path regex, logical axes per dim — innermost dims; leading stacked-layer
+#  dims are padded with None automatically)
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("vocab", "embed")),
+    (r"lm_head$", ("embed", "vocab")),
+    (r"(wq|wk|wv)$", ("fsdp", "heads")),
+    (r"wo$", ("heads", "fsdp")),
+    (r"(w_gate|w_up)$", ("fsdp", "ff")),
+    (r"w_down$", ("ff", "fsdp")),
+    (r"w_router$", ("fsdp", None)),
+    (r"(bq|bk|bv)$", ("heads",)),
+    # mamba in_proj output mixes z/x/B/C/dt at unaligned offsets — keep the
+    # fused dim replicated; head sharding is applied post-split (see models).
+    (r"in_proj$", ("fsdp", None)),
+    (r"out_proj$", ("heads", "fsdp")),
+    (r"conv_w$", (None, None)),             # fused x/B/C channel dim
+    (r"conv_b$", (None,)),
+    (r"(A_log|dt_bias|D)$", (None,)),
+    (r"gate_norm/scale$", ("heads",)),
+    (r"scale$", (None,)),                   # norms
+    (r"frontend_proj$", ("fsdp", None)),
+]
+
+# MoE expert-stacked weights carry a leading expert dim.
+_MOE_RULES: list[tuple[str, tuple]] = [
+    (r"moe/(w_gate|w_up)$", ("experts", "fsdp", None)),
+    (r"moe/w_down$", ("experts", None, "fsdp")),
+    (r"moe/w_router$", ("fsdp", None)),
+]
+
+
+def _leaf_spec(plan: Plan, path: str, ndim: int) -> P:
+    for pat, axes in _MOE_RULES + _PARAM_RULES:
+        if re.search(pat, path):
+            if not plan.fsdp:
+                axes = tuple(None if a == "fsdp" else a for a in axes)
+            pad = (None,) * (ndim - len(axes))
+            return plan.spec(*(pad + tuple(axes)))
+    return P()                             # replicate unknown leaves
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(plan: Plan, params_tree) -> object:
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: _leaf_spec(plan, _path_str(p), len(leaf.shape)),
+        params_tree)
+
+
+def param_shardings(plan: Plan, params_tree) -> object:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(plan.mesh, s), param_specs(plan, params_tree))

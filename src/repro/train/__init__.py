@@ -1,0 +1,4 @@
+from repro.train import checkpoint, compression, data, elastic, optimizer, step
+
+__all__ = ["checkpoint", "compression", "data", "elastic", "optimizer",
+           "step"]

@@ -1,0 +1,102 @@
+"""Elastic scaling + fault-tolerance utilities.
+
+On a real fleet these hooks are driven by the cluster controller; here they
+are implemented against JAX meshes so the whole restart path is exercisable
+on the host-platform fake-device mesh:
+
+* ``survivors_mesh``      — rebuild the largest usable mesh after losing
+                            devices (drops whole data rows: the model axis
+                            must stay intact, batch shrinks).
+* ``remesh_state``        — move a train state onto a new mesh/plan
+                            (device_put with the new shardings; combined
+                            with checkpoint.restore this is the full
+                            node-failure recovery path).
+* ``StepWatchdog``        — straggler mitigation: alarm if a step exceeds
+                            ``timeout_s`` (on TPU fleets the action is
+                            re-dispatching the step on a spare slice; on
+                            this harness we surface the callback).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding.plan import Plan, param_shardings
+
+
+def survivors_mesh(mesh: Mesh, failed_device_ids: Sequence[int],
+                   data_axis: str = "data") -> Mesh:
+    """Largest mesh of surviving devices with the model axis intact.
+
+    Failure granularity is a full ``data`` row (a pod slice): any row
+    containing a failed device is dropped — the standard recovery unit for
+    gang-scheduled TPU jobs.
+    """
+    devs = np.array(mesh.devices)
+    axis = mesh.axis_names.index(data_axis)
+    keep = []
+    for i in range(devs.shape[axis]):
+        row = np.take(devs, i, axis=axis)
+        row_ids = {d.id for d in row.flatten()}
+        if not row_ids & set(failed_device_ids):
+            keep.append(i)
+    if not keep:
+        raise RuntimeError("no surviving data rows")
+    new_devs = np.take(devs, keep, axis=axis)
+    return Mesh(new_devs, mesh.axis_names)
+
+
+def remesh_state(state, old_plan: Plan, new_plan: Plan):
+    """Move params/opt pytrees from one mesh onto another."""
+    shardings = jax.tree.map(
+        lambda _: None, state)  # placeholder structure
+    new_sh = param_shardings(new_plan, state)
+    return jax.tree.map(lambda x, s: jax.device_put(jax.device_get(x), s),
+                        state, new_sh)
+
+
+class StepWatchdog:
+    """Detect straggling steps: fire ``on_timeout`` if a step takes too long.
+
+    Usage::
+
+        wd = StepWatchdog(timeout_s=300, on_timeout=redispatch)
+        with wd.step(i):
+            state, metrics = train_step(state, batch)
+    """
+
+    def __init__(self, timeout_s: float,
+                 on_timeout: Optional[Callable[[int, float], None]] = None):
+        self.timeout_s = timeout_s
+        self.on_timeout = on_timeout or (lambda step, dt: None)
+        self.timeouts: list[int] = []
+
+    class _Ctx:
+        def __init__(self, wd: "StepWatchdog", step: int):
+            self.wd, self.step_idx = wd, step
+            self._done = threading.Event()
+
+        def __enter__(self):
+            self.t0 = time.monotonic()
+
+            def watch():
+                if not self._done.wait(self.wd.timeout_s):
+                    dt = time.monotonic() - self.t0
+                    self.wd.timeouts.append(self.step_idx)
+                    self.wd.on_timeout(self.step_idx, dt)
+
+            self._thread = threading.Thread(target=watch, daemon=True)
+            self._thread.start()
+            return self
+
+        def __exit__(self, *exc):
+            self._done.set()
+            return False
+
+    def step(self, i: int) -> "StepWatchdog._Ctx":
+        return self._Ctx(self, i)

@@ -1,0 +1,138 @@
+"""Optimizers as pure pytree transformations (no external deps).
+
+* ``adamw``     — AdamW with decoupled weight decay; m/v shard like params.
+* ``adafactor`` — factored second moment (row/col statistics for >=2-D
+                  params), beta1=0: optimizer state is ~2/sqrt(d) of AdamW's,
+                  which is what lets llama3-405b / dbrx-132b optimizer state
+                  fit 16 GB/chip on the 256-chip pod.
+
+States are plain dicts so ``repro.train.checkpoint`` serializes them and
+``repro.sharding.plan`` shards them with the same path rules as params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable          # params -> opt_state
+    update: Callable        # (grads, opt_state, params) -> (updates, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          warmup_steps: int = 100) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": _tmap(zeros, params), "v": _tmap(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def schedule(count):
+        warm = jnp.minimum(1.0, (count + 1) / max(warmup_steps, 1))
+        return lr * warm
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = schedule(c)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        mh = _tmap(lambda m_: m_ / (1 - b1 ** c.astype(jnp.float32)), m)
+        vh = _tmap(lambda v_: v_ / (1 - b2 ** c.astype(jnp.float32)), v)
+        upd = _tmap(
+            lambda mh_, vh_, p: (-lr_t * (mh_ / (jnp.sqrt(vh_) + eps)
+                                          + weight_decay
+                                          * p.astype(jnp.float32))
+                                 ).astype(p.dtype),
+            mh, vh, params)
+        return upd, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — beta1=0, factored second moments
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps1: float = 1e-30,
+              eps2: float = 1e-3, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0, warmup_steps: int = 100
+              ) -> Optimizer:
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def leaf(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+        beta2 = 1.0 - cf ** (-decay)
+        warm = jnp.minimum(1.0, cf / max(warmup_steps, 1))
+        lr_t = lr * warm
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps1
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), eps1)
+                u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                         + eps1)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / (jnp.sqrt(v) + eps1)
+                ns = {"v": v}
+            # update clipping (RMS of update <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(
+                jnp.square(p.astype(jnp.float32)))))
+            upd = -lr_t * scale * u
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * p.astype(jnp.float32)
+            return upd.astype(p.dtype), ns
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [leaf(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upd = tdef.unflatten([o[0] for o in outs])
+        ns = tdef.unflatten([o[1] for o in outs])
+        return upd, {"f": ns, "count": c}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,121 @@
+"""The jitted training step: grad-accumulation scan + optimizer update.
+
+``make_train_step`` builds the function the dry-run lowers for every
+``train_4k`` cell: microbatched forward/backward under ``lax.scan`` (so HLO
+size is O(1) in microbatch count), gradient accumulation in fp32, optional
+int8 error-feedback compression of the cross-pod gradient reduction, then
+the optimizer update.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train.optimizer import Optimizer, get_optimizer
+from repro.train import compression as comp
+
+
+def init_train_state(cfg: ModelConfig, optimizer: Optimizer,
+                     key: jax.Array) -> dict:
+    params = T.init_params(cfg, key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg: ModelConfig, optimizer: Optimizer) -> dict:
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(partial(init_train_state, cfg, optimizer), key)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """[B, ...] -> [n, B//n, ...] on every leaf."""
+    def r(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optional[Optimizer] = None,
+                    grad_compression: Optional[str] = None) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    grad_compression: None | "int8_pod" — int8 error-feedback compression of
+    the cross-pod gradient all-reduce (see repro.train.compression; the
+    baseline pjit path reduces implicitly in bf16/f32).
+    """
+    if optimizer is None:
+        optimizer = get_optimizer(cfg.optimizer)
+    nmb = max(cfg.microbatch, 1)
+
+    def loss(params, mb):
+        l, m = T.loss_fn(cfg, params, mb)
+        return l, m
+
+    accum_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def grads_of(params, batch):
+        if nmb == 1:
+            (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            return g, l, m
+        mbs = _split_microbatches(batch, nmb)
+
+        if cfg.grad_accum == "fused":
+            # differentiate through the microbatch scan: XLA's backward
+            # while-loop carry IS the gradient accumulator (params dtype,
+            # 2 resident copies) — no separate f32 tree.
+            def loss_all(p):
+                def body(acc, mb):
+                    l, _ = loss(p, mb)
+                    return acc + l, None
+                # remat: each microbatch's forward is recomputed during its
+                # backward step, so only ONE microbatch's residuals are ever
+                # live alongside the (params-dtype) grad carry
+                tot, _ = lax.scan(jax.checkpoint(body), 0.0, mbs)
+                return tot / nmb
+            l, g = jax.value_and_grad(loss_all)(params)
+            return g, l, {}
+
+        def mb_step(acc, mb):
+            g_acc, l_acc = acc
+            (l, m), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+            # scale each microbatch before accumulating: keeps bf16
+            # accumulation in range and makes the sum the mean
+            g_acc = jax.tree.map(
+                lambda a, b: a + (b.astype(jnp.float32) / nmb).astype(
+                    accum_dt), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dt), params)
+        if cfg.grad_accum == "unroll":
+            acc = (g0, 0.0)
+            for i in range(nmb):
+                mb = jax.tree.map(lambda a: a[i], mbs)
+                acc, _ = mb_step(acc, mb)
+            g, lsum = acc
+        else:
+            (g, lsum), _ = lax.scan(mb_step, (g0, 0.0), mbs)
+        return g, lsum / nmb, {}
+
+    def train_step(state, batch):
+        params = state["params"]
+        grads, l, _ = grads_of(params, batch)
+        if grad_compression == "int8_pod":
+            grads, state = comp.apply_error_feedback(grads, state)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        updates, opt_state = optimizer.update(grads, state["opt"], params)
+        new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+        new_state = dict(state)
+        new_state.update(params=new_params, opt=opt_state,
+                         step=state["step"] + 1)
+        return new_state, {"loss": l, "grad_norm": gnorm}
+
+    return train_step

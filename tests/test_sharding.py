@@ -1,0 +1,135 @@
+"""Sharding plan: rule resolution, conflict handling, divisibility audit,
+and a multi-device (subprocess) end-to-end equality check."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.models import transformer as T
+from repro.sharding.plan import (DEFAULT_RULES, Plan, param_specs, shard,
+                                 use_plan)
+
+
+class FakeMesh:
+    def __init__(self, axis_names):
+        self.axis_names = axis_names
+
+
+def test_rule_resolution_filters_missing_axes():
+    plan = Plan(mesh=FakeMesh(("data", "model")))
+    # "batch" maps to (pod, data) but pod is absent -> data only
+    assert plan.spec("batch") == P("data")
+    assert plan.spec("heads") == P("model")
+    assert plan.spec(None) == P(None)
+
+
+def test_duplicate_axis_conflict_drops_earlier_dim():
+    plan = Plan(mesh=FakeMesh(("data", "model")),
+                rules={"seq": "model"})
+    # seq and vocab both want "model": vocab (later dim) wins
+    assert plan.spec("batch", "seq", "vocab") == P("data", None, "model")
+    # without conflict seq keeps model
+    assert plan.spec("batch", "seq", "embed") == P("data", "model", None)
+
+
+def test_rule_overrides():
+    plan = Plan(mesh=FakeMesh(("data", "model")), rules={"batch": None})
+    assert plan.spec("batch", "seq") == P(None, None)
+
+
+AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_divisibility_on_production_mesh(arch, fsdp):
+    """Audit: every sharded param dim divides its mesh axes (llava's 56
+    heads is the known documented exception — GSPMD pads)."""
+    cfg = configs.get(arch)
+    plan = Plan(mesh=FakeMesh(("pod", "data", "model")), fsdp=fsdp)
+    params = T.abstract_params(cfg)
+    specs = param_specs(plan, params)
+    flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    uneven = []
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else ax
+            k = 1
+            for a in axes:
+                k *= AXIS_SIZE[a]
+            if dim % k:
+                uneven.append((jax.tree_util.keystr(path), dim, k))
+    if arch == "llava-next-34b":
+        # 56 heads % 16 != 0: documented, GSPMD pads internally
+        assert all("w" in p or "b" in p for p, _, _ in uneven)
+    else:
+        assert not uneven, uneven
+
+
+def test_shard_noop_without_plan():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert shard(x, "batch", "embed") is x
+
+
+MULTI_DEV_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    import sys
+    sys.path.insert(0, "src")
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_host_mesh
+    from repro.sharding.plan import Plan, param_shardings, use_plan
+    from repro.train.data import DataConfig, make_batch
+    from repro.train.optimizer import adamw
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = get_reduced("qwen2.5-3b").replace(dtype="float32")
+    opt = adamw(lr=1e-3)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    batch = make_batch(dc, jnp.int32(0))
+
+    # unsharded reference
+    state0 = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+    s_ref, m_ref = jax.jit(make_train_step(cfg, opt))(state0, batch)
+
+    # sharded on a 2x4 mesh
+    mesh = make_host_mesh(2, 4)
+    plan = Plan(mesh=mesh, fsdp=True)
+    with use_plan(plan), mesh:
+        state1 = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+        sh = {"params": param_shardings(plan, state1["params"]),
+              "opt": param_shardings(plan, state1["opt"]),
+              "step": jax.sharding.NamedSharding(
+                  mesh, jax.sharding.PartitionSpec())}
+        state1 = jax.device_put(state1, sh)
+        s_sh, m_sh = jax.jit(make_train_step(cfg, opt))(state1, batch)
+
+    assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-4, (
+        float(m_ref["loss"]), float(m_sh["loss"]))
+    a = np.asarray(jax.device_get(s_ref["params"]["lm_head"]))
+    b = np.asarray(jax.device_get(s_sh["params"]["lm_head"]))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+    print("MULTIDEV_OK")
+""")
+
+
+def test_sharded_step_equals_unsharded_multidevice():
+    """Sharded-vs-unsharded numerical equality on an 8-fake-device mesh.
+
+    Runs in a subprocess because the device count must be set before jax
+    initializes (the main test process keeps 1 device, per the harness
+    contract)."""
+    r = subprocess.run([sys.executable, "-c", MULTI_DEV_SCRIPT],
+                       capture_output=True, text=True, timeout=600,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "MULTIDEV_OK" in r.stdout, r.stdout + r.stderr

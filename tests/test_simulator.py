@@ -1,0 +1,128 @@
+"""Discrete-event simulator invariants (hypothesis property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics, policies
+from repro.core.simulator import SimConfig, simulate
+from repro.core.workload import FaaSBenchConfig, Request, generate
+
+ALL = ["ideal", "srtf", "sfs", "cfs", "rr", "fifo"]
+
+
+def small_workload(n=120, load=0.9, seed=0, io=0.0):
+    return generate(FaaSBenchConfig(n_requests=n, load=load, seed=seed,
+                                    io_fraction=io))
+
+
+@pytest.mark.parametrize("policy", ALL)
+def test_all_jobs_finish_and_bounds(policy):
+    reqs = small_workload()
+    res = simulate(reqs, policies.make(policy, 4))
+    assert len(res.stats) == len(reqs)
+    for s, r in zip(res.stats, reqs):
+        assert s.finish >= r.arrival + r.service - 1e-9
+        assert s.rte <= 1.0 + 1e-9
+        assert s.turnaround >= r.service + r.total_io - 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50), load=st.floats(0.5, 1.1),
+       cores=st.integers(1, 8),
+       policy=st.sampled_from(["sfs", "cfs", "rr", "fifo", "srtf"]))
+def test_ideal_lower_bounds_everything(seed, load, cores, policy):
+    reqs = small_workload(n=60, load=load, seed=seed)
+    ideal = simulate(reqs, policies.make("ideal", cores))
+    res = simulate(reqs, policies.make(policy, cores))
+    ta_i = metrics.turnarounds(ideal)
+    ta_p = metrics.turnarounds(res)
+    assert np.all(ta_p >= ta_i - 1e-9)
+
+
+def test_busy_time_conservation():
+    """Total CPU credited equals total service demand (work conservation)."""
+    reqs = small_workload(n=200, load=0.8, seed=3)
+    total = sum(r.service for r in reqs)
+    for policy in ["sfs", "cfs", "rr", "fifo", "srtf"]:
+        res = simulate(reqs, policies.make(policy, 4))
+        assert res.busy_time == pytest.approx(total, rel=1e-6), policy
+
+
+def test_single_job_runs_uninterrupted_under_sfs():
+    reqs = [Request(rid=0, arrival=0.0, service=0.05)]
+    res = simulate(reqs, policies.sfs(2))
+    s = res.stats[0]
+    assert s.n_ctx == 0 and not s.demoted
+    # only the switch-in cost separates it from ideal
+    assert s.turnaround == pytest.approx(0.05 + 100e-6, abs=1e-9)
+
+
+def test_sfs_short_jobs_never_demoted():
+    """Every job shorter than the (fixed) slice completes in FILTER."""
+    cfg = policies.sfs(4, slice_s=0.2)
+    reqs = small_workload(n=150, load=1.0, seed=5)
+    res = simulate(reqs, cfg)
+    for s, r in zip(res.stats, reqs):
+        if r.service < 0.2 and not r.io_events:
+            assert not s.demoted, r
+
+
+def test_sfs_long_jobs_demoted_under_contention():
+    cfg = policies.sfs(2, slice_s=0.05)
+    reqs = small_workload(n=150, load=1.0, seed=6)
+    res = simulate(reqs, cfg)
+    longs = [s for s, r in zip(res.stats, reqs) if r.service > 0.06]
+    assert any(s.demoted for s in longs)
+
+
+def test_fifo_convoy_effect():
+    """A short job behind a long job waits under FIFO, not under SRTF."""
+    reqs = [Request(rid=0, arrival=0.0, service=2.0),
+            Request(rid=1, arrival=0.01, service=2.0),
+            Request(rid=2, arrival=0.02, service=0.01)]
+    fifo = simulate(reqs, policies.fifo(2))
+    srtf = simulate(reqs, policies.make("srtf", 2))
+    assert fifo.stats[2].turnaround > 1.5
+    assert srtf.stats[2].turnaround < 0.1
+
+
+def test_srtf_preempts_for_shorter_job():
+    reqs = [Request(rid=0, arrival=0.0, service=1.0),
+            Request(rid=1, arrival=0.1, service=0.05)]
+    res = simulate(reqs, policies.make("srtf", 1))
+    assert res.stats[1].finish == pytest.approx(0.15, abs=0.01)
+
+
+def test_io_aware_beats_oblivious():
+    reqs = small_workload(n=300, load=0.95, seed=7, io=0.75)
+    aware = simulate(reqs, policies.sfs(4, io_aware=True))
+    obliv = simulate(reqs, policies.sfs(4, io_aware=False))
+    assert metrics.mean_turnaround(aware) < metrics.mean_turnaround(obliv)
+
+
+def test_adaptive_slice_updates():
+    reqs = small_workload(n=400, load=1.0, seed=8)
+    res = simulate(reqs, policies.sfs(4, adaptive_window=50))
+    assert len(res.slice_timeline) >= 2          # S actually adapted
+    for _, s in res.slice_timeline:
+        assert s > 0
+
+
+def test_overload_bypass_reduces_queue_delay():
+    reqs = generate(FaaSBenchConfig(n_requests=1500, load=0.95, seed=9,
+                                    iat="trace"))
+    on = simulate(reqs, policies.sfs(4, overload_factor=3.0))
+    off = simulate(reqs, policies.sfs(4, overload_factor=None))
+    qd_on = max(d for _, d in on.queue_delay_timeline)
+    qd_off = max(d for _, d in off.queue_delay_timeline)
+    assert qd_on <= qd_off
+
+
+def test_compare_headline_math():
+    reqs = small_workload(n=100, load=1.0, seed=10)
+    a = simulate(reqs, policies.sfs(4))
+    b = simulate(reqs, policies.cfs(4))
+    hc = metrics.compare(a, b)
+    assert hc.frac_improved + hc.frac_regressed == pytest.approx(1.0)
+    assert hc.mean_speedup_improved >= 1.0
+    assert hc.mean_slowdown_regressed >= 1.0

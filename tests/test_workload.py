@@ -1,0 +1,52 @@
+"""FaaSBench workload generator: distribution + determinism properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.workload import (AZURE_TABLE_I, FaaSBenchConfig, generate,
+                                 offered_load)
+
+
+def test_deterministic():
+    a = generate(FaaSBenchConfig(n_requests=200, seed=3))
+    b = generate(FaaSBenchConfig(n_requests=200, seed=3))
+    assert all(x == y for x, y in zip(a, b))
+    c = generate(FaaSBenchConfig(n_requests=200, seed=4))
+    assert any(x.service != y.service for x, y in zip(a, c))
+
+
+def test_table_i_masses():
+    reqs = generate(FaaSBenchConfig(n_requests=30_000, seed=0))
+    d = np.array([r.service for r in reqs])
+    for p, lo, hi in AZURE_TABLE_I:
+        got = ((d >= lo / 1e3) & (d < hi / 1e3)).mean()
+        assert abs(got - p) < 0.02, (lo, hi, got, p)
+
+
+@settings(max_examples=20, deadline=None)
+@given(load=st.floats(0.3, 1.2), seed=st.integers(0, 100),
+       iat=st.sampled_from(["poisson", "uniform", "trace"]))
+def test_exact_load_normalization(load, seed, iat):
+    reqs = generate(FaaSBenchConfig(n_requests=800, load=load, seed=seed,
+                                    iat=iat))
+    assert offered_load(reqs, 12) == pytest.approx(load, rel=0.02)
+
+
+def test_arrivals_sorted_and_positive():
+    reqs = generate(FaaSBenchConfig(n_requests=500, seed=1, iat="trace"))
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    assert all(r.service > 0 for r in reqs)
+
+
+def test_io_events():
+    reqs = generate(FaaSBenchConfig(n_requests=2000, seed=2,
+                                    io_fraction=0.75))
+    frac = np.mean([len(r.io_events) > 0 for r in reqs])
+    assert 0.7 < frac < 0.8
+    for r in reqs:
+        for off, dur in r.io_events:
+            assert 0.0 <= off <= r.service
+            assert 0.01 <= dur <= 0.1
+    assert reqs[0].ideal_turnaround == pytest.approx(
+        reqs[0].service + reqs[0].total_io)
