@@ -1,0 +1,22 @@
+# Tier-1 verify + CI conveniences.  All targets assume the repo root.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test test-fast bench-smoke bench
+
+# the tier-1 command (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# jax-light subset: scheduler/simulator/cluster/workload logic only
+test-fast:
+	$(PY) -m pytest -q tests/test_simulator.py tests/test_workload.py \
+	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py
+
+# <60 s cluster-dispatch smoke check (asserts the short-P99 headline)
+bench-smoke:
+	$(PY) benchmarks/cluster_sweep.py --smoke
+
+# full benchmark suite (paper figures + cluster sweep)
+bench:
+	$(PY) -m benchmarks.run

@@ -10,9 +10,10 @@ from __future__ import annotations
 import sys
 import time
 
-from benchmarks import (fig1_duration_cdf, fig2_policies, fig6_7_load_sweep,
-                        fig9_10_timeslice, fig11_io, fig12_overload,
-                        roofline, serving_e2e, table2_overhead)
+from benchmarks import (cluster_sweep, fig1_duration_cdf, fig2_policies,
+                        fig6_7_load_sweep, fig9_10_timeslice, fig11_io,
+                        fig12_overload, roofline, serving_e2e,
+                        table2_overhead)
 
 SUITES = {
     "fig1": fig1_duration_cdf,
@@ -24,6 +25,7 @@ SUITES = {
     "table2": table2_overhead,
     "serving": serving_e2e,
     "roofline": roofline,
+    "cluster": cluster_sweep,
 }
 
 

@@ -3,12 +3,19 @@
 Public API:
   workload.FaaSBenchConfig / generate  — FaaSBench (§VII)
   simulator.SimConfig / simulate       — discrete-event multicore simulator
+  simulator.ClusterSimConfig / simulate_cluster — multi-server mode
+  dispatch.make_dispatch               — cluster dispatch policies
   policies.{sfs,cfs,fifo,rr,srtf,ideal} — policy constructors
   metrics                              — RTE / turnaround / headline stats
 """
 from repro.core.workload import FaaSBenchConfig, Request, generate
-from repro.core.simulator import SimConfig, SimResult, JobStats, simulate
-from repro.core import policies, metrics
+from repro.core.simulator import (ClusterSimConfig, ClusterSimResult,
+                                  SimConfig, SimResult, JobStats, simulate,
+                                  simulate_cluster)
+from repro.core.dispatch import make_dispatch
+from repro.core import dispatch, policies, metrics
 
 __all__ = ["FaaSBenchConfig", "Request", "generate", "SimConfig",
-           "SimResult", "JobStats", "simulate", "policies", "metrics"]
+           "SimResult", "JobStats", "simulate", "ClusterSimConfig",
+           "ClusterSimResult", "simulate_cluster", "make_dispatch",
+           "dispatch", "policies", "metrics"]

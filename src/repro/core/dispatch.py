@@ -1,0 +1,230 @@
+"""Cluster-level dispatch policies — the third scheduling level.
+
+The paper fixes *per-server* scheduling (FILTER lanes over a fair-share
+pool); at production scale the layer above — which server an invocation
+lands on — dominates tail latency (Kaffes et al., "Practical Scheduling
+for Real-World Serverless Computing"; Hiku, "Pull-Based Scheduling for
+Serverless Computing").  This module implements that layer once, shared
+by the tick-engine cluster (``repro.serving.cluster``) and the
+discrete-event multi-server simulator (``repro.core.simulator``), so the
+two execution models can be cross-validated policy-for-policy.
+
+Policies (``make_dispatch``):
+
+  hash               — salted-hash power-of-two-choices over outstanding
+                       work (the pre-cluster ``Router`` behaviour; the
+                       serving Cluster batch-routes each tick's arrivals
+                       against pre-delivery state to keep legacy parity).
+  least-outstanding  — global argmin of outstanding work.
+  pull               — push nothing: arrivals wait in a central queue and
+                       idle servers pull (worker-initiated dispatch, per
+                       Hiku).  ``route`` returns None; the owner drains
+                       the queue via ``next_puller``.
+  sfs-aware          — generalizes the paper's two-level idea up one
+                       level: short-ETA requests go to the server with
+                       the most idle FILTER lanes, long requests to the
+                       server already carrying the largest fair-share
+                       pool (concentrating long work keeps the other
+                       servers FILTER-rich).  A cluster-level adaptive
+                       slice S = mean-IAT x total-lanes and a transient-
+                       overload bypass (estimated wait >= O x S falls
+                       back to least-outstanding) mirror the per-server
+                       ``O x S`` rule of §V-C/E.
+
+Every policy sees servers through the tiny ``ServerView`` interface, so
+it never touches engine or simulator internals.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import deque
+from typing import Optional, Sequence
+
+
+class ServerView:
+    """Scheduling-state view of one server, as the dispatcher sees it.
+
+    ``lanes`` is the server's parallelism (decode lanes / cores).  Units
+    of ``current_slice`` follow the owner (engine ticks vs seconds);
+    dispatch only ever compares them against same-unit IATs.
+    """
+
+    lanes: int = 1
+
+    def outstanding(self) -> int:
+        """Admitted but unfinished requests."""
+        raise NotImplementedError
+
+    def filter_free(self) -> int:
+        """Idle FILTER lanes (capacity for short work right now)."""
+        raise NotImplementedError
+
+    def fair_load(self) -> int:
+        """Size of the fair-share (CFS) pool — demoted/long work."""
+        raise NotImplementedError
+
+    def queue_len(self) -> int:
+        """Length of the server's global FILTER queue."""
+        raise NotImplementedError
+
+    def capacity(self) -> int:
+        """Requests this server could start this instant (pull mode)."""
+        raise NotImplementedError
+
+
+class DispatchPolicy:
+    name = "base"
+
+    def __init__(self, views: Sequence[ServerView]):
+        self.views = list(views)
+        self.dispatch_counts = [0] * len(self.views)
+
+    def route(self, rid: int, eta: Optional[float],
+              t: float) -> Optional[int]:
+        """Pick a server for request ``rid`` arriving at ``t``.
+
+        ``eta`` is the front-end's service-demand estimate (e.g. from a
+        max-tokens cap or a duration predictor), None when unknown.
+        Returns a server index, or None to hold the request in the
+        owner's central queue (pull mode).
+        """
+        raise NotImplementedError
+
+    def record(self, idx: int):
+        self.dispatch_counts[idx] += 1
+
+    def _least_outstanding(self) -> int:
+        return min(range(len(self.views)),
+                   key=lambda i: (self.views[i].outstanding(), i))
+
+
+def _hash(rid: int, salt: int) -> int:
+    h = hashlib.blake2s(f"{rid}:{salt}".encode(), digest_size=4)
+    return int.from_bytes(h.digest(), "little")
+
+
+class HashDispatch(DispatchPolicy):
+    """Power-of-two-choices over consistent hashing (legacy Router)."""
+    name = "hash"
+
+    def route(self, rid, eta, t):
+        n = len(self.views)
+        if n == 1:
+            return 0
+        a = _hash(rid, 1) % n
+        b = _hash(rid, 2) % n
+        if b == a:
+            b = (a + 1) % n
+        return a if (self.views[a].outstanding()
+                     <= self.views[b].outstanding()) else b
+
+
+class LeastOutstandingDispatch(DispatchPolicy):
+    name = "least-outstanding"
+
+    def route(self, rid, eta, t):
+        return self._least_outstanding()
+
+
+class PullDispatch(DispatchPolicy):
+    """Worker-initiated dispatch: arrivals stay central, idle servers pull.
+
+    ``route`` never places a request; the owner calls ``next_puller``
+    whenever the central queue is non-empty and delivers to the returned
+    server.  A rotating scan start keeps ties fair across servers.
+    """
+    name = "pull"
+
+    def __init__(self, views):
+        super().__init__(views)
+        self._rr = 0
+
+    def route(self, rid, eta, t):
+        return None
+
+    def next_puller(self) -> Optional[int]:
+        n = len(self.views)
+        for k in range(n):
+            i = (self._rr + k) % n
+            if self.views[i].capacity() > 0:
+                self._rr = (i + 1) % n
+                return i
+        return None
+
+
+class SFSAwareDispatch(DispatchPolicy):
+    """Three-level SFS: route by ETA class, bypass under overload.
+
+    Short requests (eta <= S, or unknown — same optimism as FILTER's
+    run-first-demote-later) prefer the server with the most idle FILTER
+    lanes; long requests prefer the server whose outstanding work is
+    already mostly fair-share (min outstanding - fair_load), which
+    concentrates long work and keeps the remaining servers FILTER-rich.
+    If the preferred server's estimated FILTER wait (queue_len x S /
+    lanes) reaches O x S, the preference is bypassed for plain
+    least-outstanding — the cluster analogue of §V-E.
+    """
+    name = "sfs-aware"
+
+    def __init__(self, views, *, overload_factor: float = 3.0,
+                 adaptive_window: int = 100, slice_init: float = 32.0):
+        super().__init__(views)
+        self.total_lanes = sum(v.lanes for v in self.views)
+        self.overload_factor = overload_factor
+        self.window = adaptive_window
+        self.S = slice_init
+        self._iats: deque = deque(maxlen=adaptive_window)
+        self._last_arrival: Optional[float] = None
+        self._since_update = 0
+        self.slice_timeline: list = [(0.0, self.S)]
+        self.overload_bypasses = 0
+
+    def _observe(self, t: float):
+        if self._last_arrival is not None:
+            self._iats.append(t - self._last_arrival)
+        self._last_arrival = t
+        self._since_update += 1
+        if (self._since_update >= self.window
+                and len(self._iats) == self.window):
+            mean_iat = sum(self._iats) / len(self._iats)
+            self.S = max(mean_iat * self.total_lanes, 1e-9)
+            self._since_update = 0
+            self.slice_timeline.append((t, self.S))
+
+    def route(self, rid, eta, t):
+        self._observe(t)
+        short = eta is None or eta <= self.S
+        if short:
+            # idle FILTER lanes first; under saturation the FILTER queue
+            # length is the wait a short request actually sees (longs by
+            # then live in the fair-share pool), so prefer the shortest —
+            # NOT least-outstanding, which undercounts work on servers
+            # that concentrate long requests.
+            best = min(range(len(self.views)),
+                       key=lambda i: (-self.views[i].filter_free(),
+                                      self.views[i].queue_len(),
+                                      self.views[i].outstanding(), i))
+            v = self.views[best]
+            est_wait = v.queue_len() * self.S / max(v.lanes, 1)
+            if (v.filter_free() == 0
+                    and est_wait >= self.overload_factor * self.S):
+                self.overload_bypasses += 1
+                return self._least_outstanding()
+            return best
+        # long: fewest FILTER-bound requests = outstanding - fair pool
+        return min(range(len(self.views)),
+                   key=lambda i: (self.views[i].outstanding()
+                                  - self.views[i].fair_load(),
+                                  self.views[i].outstanding(), i))
+
+
+POLICIES = ("hash", "least-outstanding", "pull", "sfs-aware")
+
+
+def make_dispatch(policy: str, views: Sequence[ServerView],
+                  **kw) -> DispatchPolicy:
+    cls = {"hash": HashDispatch,
+           "least-outstanding": LeastOutstandingDispatch,
+           "pull": PullDispatch,
+           "sfs-aware": SFSAwareDispatch}[policy]
+    return cls(views, **kw)

@@ -71,6 +71,52 @@ def compare(treat: SimResult, base: SimResult,
     )
 
 
+# ---------------------------------------------------------------------------
+# Per-duration-bucket breakdowns (cluster sweeps): the paper's headline is
+# about *short* functions, so aggregate percentiles hide the effect — split
+# by service demand instead.
+# ---------------------------------------------------------------------------
+
+DEFAULT_BUCKET_EDGES_S = (0.1, 1.0)     # short < 100 ms <= medium < 1 s <= long
+
+
+def bucket_labels(edges: Sequence[float], unit: str = "s") -> list:
+    edges = list(edges)
+    labels = [f"<{edges[0]:g}{unit}"]
+    labels += [f"{lo:g}-{hi:g}{unit}" for lo, hi in zip(edges, edges[1:])]
+    labels.append(f">={edges[-1]:g}{unit}")
+    return labels
+
+
+def bucket_stats(service, turnaround, rte=None,
+                 edges: Sequence[float] = DEFAULT_BUCKET_EDGES_S,
+                 ps=(50, 99), unit: str = "s") -> dict:
+    """Percentile turnaround (and mean RTE) per service-demand bucket.
+
+    Works on plain arrays so both the DES (seconds) and the tick engine
+    (ticks — pass matching ``edges``/``unit``) share it.
+    """
+    service = np.asarray(service, dtype=np.float64)
+    turnaround = np.asarray(turnaround, dtype=np.float64)
+    idx = np.digitize(service, np.asarray(edges, dtype=np.float64))
+    out = {}
+    for b, label in enumerate(bucket_labels(edges, unit)):
+        m = idx == b
+        row = {"n": int(m.sum())}
+        for p in ps:
+            row[f"p{p:g}"] = (float(np.percentile(turnaround[m], p))
+                              if m.any() else float("nan"))
+        if rte is not None and m.any():
+            row["mean_rte"] = float(np.asarray(rte)[m].mean())
+        out[label] = row
+    return out
+
+
+def result_bucket_stats(res: SimResult, **kw) -> dict:
+    svc = np.array([s.service for s in res.stats])
+    return bucket_stats(svc, turnarounds(res), rtes(res), **kw)
+
+
 def mean_turnaround(res: SimResult) -> float:
     return float(turnarounds(res).mean())
 

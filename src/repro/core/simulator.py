@@ -34,6 +34,7 @@ import math
 from collections import deque
 from typing import Optional
 
+from repro.core.dispatch import PullDispatch, ServerView, make_dispatch
 from repro.core.workload import Request
 
 _EPS = 1e-12
@@ -184,11 +185,36 @@ class Simulator:
         self._last_arrival: Optional[float] = None
         self._arrivals_since_update = 0
         self.slice_timeline: list = [(0.0, self.S)]
+        self.srtf_wait: list = []        # heap (remaining, seq, job)
 
     # -- event plumbing -----------------------------------------------------
     def _push(self, t: float, kind: str, *data):
         self._seq += 1
         heapq.heappush(self.events, (t, self._seq, kind, data))
+
+    # -- stepwise API (multi-server / cluster mode) -------------------------
+    def next_event_time(self) -> float:
+        return self.events[0][0] if self.events else _INF
+
+    def step(self):
+        """Pop and process one event."""
+        self.now, _, kind, data = heapq.heappop(self.events)
+        getattr(self, "_ev_" + kind)(*data)
+
+    def inject(self, req: Request, t: Optional[float] = None):
+        """Cluster mode: deliver a request to this server at time ``t``.
+
+        ``req.arrival`` keeps the *cluster* arrival time, so turnaround
+        measured from it includes any central-queue wait before delivery.
+        """
+        assert self.cfg.policy != "ideal", "ideal has no event loop"
+        t = self.now if t is None else t
+        self.reqs.append(req)
+        kind = "s_arrival" if self.cfg.policy == "srtf" else "arrival"
+        self._push(t, kind, req)
+
+    def idle_cores(self) -> int:
+        return sum(1 for c in self.cores if c.state == "idle")
 
     # -- public entry ---------------------------------------------------------
     def run(self) -> SimResult:
@@ -199,8 +225,7 @@ class Simulator:
         for r in self.reqs:
             self._push(r.arrival, "arrival", r)
         while self.events:
-            self.now, _, kind, data = heapq.heappop(self.events)
-            getattr(self, "_ev_" + kind)(*data)
+            self.step()
         return self._result()
 
     # ------------------------------------------------------------------
@@ -222,10 +247,8 @@ class Simulator:
     def _run_srtf(self) -> SimResult:
         for r in self.reqs:
             self._push(r.arrival, "s_arrival", r)
-        self.srtf_wait: list = []        # heap (remaining, seq, job)
         while self.events:
-            self.now, _, kind, data = heapq.heappop(self.events)
-            getattr(self, "_ev_" + kind)(*data)
+            self.step()
         return self._result()
 
     def _srtf_admit(self, job: _Job):
@@ -580,3 +603,158 @@ class Simulator:
 def simulate(requests, cfg: SimConfig) -> SimResult:
     """Run one policy over a workload; deterministic given the workload."""
     return Simulator(requests, cfg).run()
+
+
+# ---------------------------------------------------------------------------
+# Multi-server mode: N per-server Simulators behind cluster dispatch
+# ---------------------------------------------------------------------------
+
+
+class _SimView(ServerView):
+    """Dispatch-visible scheduling state of one DES server."""
+
+    def __init__(self, sim: Simulator):
+        self.sim = sim
+
+    @property
+    def lanes(self) -> int:
+        return self.sim.cfg.cores
+
+    def outstanding(self) -> int:
+        return len(self.sim.reqs) - self.sim.finished
+
+    def filter_free(self) -> int:
+        return self.sim.idle_cores()
+
+    def fair_load(self) -> int:
+        return len(self.sim.cfs_rq) + sum(1 for c in self.sim.cores
+                                          if c.state == "cfs")
+
+    def queue_len(self) -> int:
+        return len(self.sim.global_queue)
+
+    def capacity(self) -> int:
+        return self.sim.idle_cores()
+
+
+@dataclasses.dataclass
+class ClusterSimConfig:
+    n_servers: int = 4
+    dispatch: str = "hash"       # hash | least-outstanding | pull | sfs-aware
+    server: SimConfig = dataclasses.field(default_factory=SimConfig)
+    # eta hints: the front-end knows each request's service demand (e.g. a
+    # max-tokens cap / duration predictor).  False = dispatch flies blind.
+    hinted: bool = True
+    # sfs-aware cluster knobs (units: seconds, like the per-server S)
+    overload_factor: float = 3.0
+    adaptive_window: int = 100
+    slice_init_s: float = 0.1
+
+
+@dataclasses.dataclass
+class ClusterSimResult:
+    merged: SimResult                 # all servers, stats in rid order
+    per_server: list                  # list[SimResult]
+    dispatch_counts: list
+    policy: str
+    overload_bypasses: int = 0
+
+
+class ClusterSimulator:
+    """Drives N per-server :class:`Simulator` instances from one shared
+    arrival stream through a :mod:`repro.core.dispatch` policy.
+
+    The global event loop interleaves server event heaps and the arrival
+    stream in timestamp order, so online policies (least-outstanding,
+    pull, sfs-aware) observe each server's true state at dispatch time.
+    With ``n_servers=1`` and ``hash`` dispatch this reduces exactly to
+    the single :class:`Simulator` (cross-validated in tests).
+    """
+
+    def __init__(self, requests, cfg: ClusterSimConfig):
+        if cfg.server.policy in ("ideal",):
+            raise ValueError("per-server policy 'ideal' has no event loop")
+        self.reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        self.cfg = cfg
+        self.servers = [Simulator([], dataclasses.replace(cfg.server))
+                        for _ in range(cfg.n_servers)]
+        views = [_SimView(s) for s in self.servers]
+        kw = {}
+        if cfg.dispatch == "sfs-aware":
+            kw = dict(overload_factor=cfg.overload_factor,
+                      adaptive_window=cfg.adaptive_window,
+                      slice_init=cfg.slice_init_s)
+        self.policy = make_dispatch(cfg.dispatch, views, **kw)
+        self.central: deque = deque()
+
+    # ------------------------------------------------------------------
+    def _deliver(self, idx: int, req: Request, t: float):
+        self.policy.record(idx)
+        srv = self.servers[idx]
+        srv.inject(req, t)
+        # process the due events now so the server's capacity/outstanding
+        # reflect the delivery before the next dispatch decision
+        while srv.next_event_time() <= t:
+            srv.step()
+
+    def _drain_pull(self, t: float):
+        if not isinstance(self.policy, PullDispatch):
+            return
+        while self.central:
+            idx = self.policy.next_puller()
+            if idx is None:
+                break
+            self._deliver(idx, self.central.popleft(), t)
+
+    def run(self) -> ClusterSimResult:
+        i, n = 0, len(self.reqs)
+        while True:
+            t_arr = self.reqs[i].arrival if i < n else _INF
+            t_srv = min((s.next_event_time() for s in self.servers),
+                        default=_INF)
+            if t_arr <= t_srv and t_arr < _INF:
+                req = self.reqs[i]
+                i += 1
+                eta = req.service if self.cfg.hinted else None
+                idx = self.policy.route(req.rid, eta, req.arrival)
+                if idx is None:
+                    self.central.append(req)
+                else:
+                    self._deliver(idx, req, req.arrival)
+                self._drain_pull(req.arrival)
+            elif t_srv < _INF:
+                srv = min(self.servers, key=Simulator.next_event_time)
+                srv.step()
+                self._drain_pull(srv.now)
+            else:
+                break
+        assert not self.central, "central queue not drained at shutdown"
+        per_server = [s._result() for s in self.servers]
+        return ClusterSimResult(
+            merged=_merge_results(per_server),
+            per_server=per_server,
+            dispatch_counts=list(self.policy.dispatch_counts),
+            policy=self.policy.name,
+            overload_bypasses=getattr(self.policy, "overload_bypasses", 0),
+        )
+
+
+def _merge_results(results) -> SimResult:
+    stats = sorted((s for r in results for s in r.stats),
+                   key=lambda s: s.rid)
+    qd = sorted((q for r in results for q in r.queue_delay_timeline),
+                key=lambda x: x[0])
+    return SimResult(
+        stats=stats,
+        busy_time=sum(r.busy_time for r in results),
+        makespan=max((r.makespan for r in results), default=0.0),
+        n_ctx_total=sum(r.n_ctx_total for r in results),
+        queue_delay_timeline=qd,
+        slice_timeline=results[0].slice_timeline if len(results) == 1
+        else [],
+    )
+
+
+def simulate_cluster(requests, cfg: ClusterSimConfig) -> ClusterSimResult:
+    """Multi-server run; deterministic given the workload and config."""
+    return ClusterSimulator(requests, cfg).run()

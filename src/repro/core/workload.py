@@ -145,9 +145,13 @@ def generate(cfg: FaaSBenchConfig) -> list[Request]:
     else:
         raise ValueError(f"unknown iat kind: {cfg.iat!r}")
 
-    # exact-load normalization: scale IATs so busy/(span*cores) == load
+    # exact-load normalization: scale IATs so busy/(span*cores) == load,
+    # where span is the first-to-last-arrival window (what offered_load
+    # measures) — the first IAT only offsets the start time, so it is
+    # excluded from the span budget.
     span_target = service.sum() / (cfg.load * cfg.cores)
-    iats = iats * (span_target / iats.sum())
+    tail = iats[1:].sum()
+    iats = iats * (span_target / tail) if tail > 0 else iats
     arrivals = np.cumsum(iats)
     has_io = rng.random(n) < cfg.io_fraction
     io_dur = rng.uniform(cfg.io_ms_range[0], cfg.io_ms_range[1], size=n) / 1e3

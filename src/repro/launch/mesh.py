@@ -6,15 +6,32 @@ device query).
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist in jax >=
+    0.5; the pinned 0.4.37 predates them and its meshes are implicitly
+    Auto on every axis — which is exactly what we request on newer
+    versions, so both paths build the same mesh.
+    """
+    kw = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if (axis_type is not None
+            and "axis_types" in inspect.signature(jax.make_mesh).parameters):
+        kw["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2):
@@ -22,5 +39,4 @@ def make_host_mesh(data: int = 2, model: int = 2):
     n = len(jax.devices())
     if data * model > n:
         data, model = 1, min(model, n)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

@@ -1,7 +1,8 @@
+from repro.serving.cluster import Cluster, ClusterConfig
 from repro.serving.engine import Engine, EngineConfig, summarize
 from repro.serving.request import Request
 from repro.serving.router import Router
 from repro.serving.schedulers import make_scheduler
 
-__all__ = ["Engine", "EngineConfig", "Request", "Router", "make_scheduler",
-           "summarize"]
+__all__ = ["Cluster", "ClusterConfig", "Engine", "EngineConfig", "Request",
+           "Router", "make_scheduler", "summarize"]

@@ -1,0 +1,165 @@
+"""Cluster of serving engines behind pluggable dispatch (level three).
+
+The scheduling hierarchy (docs/CLUSTER.md):
+
+  level 3  cluster dispatch   — which engine an invocation lands on
+  level 2  FILTER lanes       — run-to-completion short lanes (paper §V)
+  level 1  fair-share pool    — CFS for demoted/long work
+
+``Cluster`` ticks N :class:`~repro.serving.engine.Engine` replicas in
+lock step over a shared arrival stream, routing each arrival through a
+policy from :mod:`repro.core.dispatch` (``hash``, ``least-outstanding``,
+``pull``, ``sfs-aware``).  Under ``pull``, arrivals wait in a central
+queue and engines with free capacity (an idle lane AND a free cache
+slot) pull work each tick — worker-initiated dispatch, per Hiku.
+
+The same policies drive the discrete-event multi-server simulator
+(``repro.core.simulator.simulate_cluster``), so tick-engine and DES
+results cross-validate policy-for-policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.dispatch import (DispatchPolicy, HashDispatch, PullDispatch,
+                                 ServerView, make_dispatch)
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+
+
+class EngineView(ServerView):
+    """Dispatch-visible scheduling state of one tick engine."""
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+
+    @property
+    def lanes(self) -> int:
+        return self.engine.ecfg.lanes
+
+    def outstanding(self) -> int:
+        return self.engine.outstanding()
+
+    def filter_free(self) -> int:
+        return self.engine.scheduler.filter_free()
+
+    def fair_load(self) -> int:
+        return self.engine.scheduler.fair_load()
+
+    def queue_len(self) -> int:
+        return self.engine.scheduler.queue_len()
+
+    def capacity(self) -> int:
+        return self.engine.free_capacity()
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    policy: str = "hash"        # hash | least-outstanding | pull | sfs-aware
+    # sfs-aware knobs (cluster-level O x S rule, units = engine ticks)
+    overload_factor: float = 3.0
+    adaptive_window: int = 100
+    slice_init: float = 32.0
+
+
+class Cluster:
+    """N engines, one dispatch policy, lock-step ticks."""
+
+    def __init__(self, engines: Sequence[Engine],
+                 cfg: Optional[ClusterConfig] = None):
+        self.engines = list(engines)
+        self.cfg = cfg or ClusterConfig()
+        views = [EngineView(e) for e in self.engines]
+        kw = {}
+        if self.cfg.policy == "sfs-aware":
+            kw = dict(overload_factor=self.cfg.overload_factor,
+                      adaptive_window=self.cfg.adaptive_window,
+                      slice_init=self.cfg.slice_init)
+        self.policy: DispatchPolicy = make_dispatch(self.cfg.policy, views,
+                                                    **kw)
+        self.central_queue: deque[Request] = deque()
+        self.t = 0
+        # (t, central_qlen after pulls, tuple of per-engine active counts)
+        self.tick_log: list[tuple[int, int, tuple]] = []
+
+    # ------------------------------------------------------------------
+    def route(self, req: Request) -> Optional[int]:
+        """Engine index for ``req`` (None = held in the central queue)."""
+        return self.policy.route(req.rid, req.eta_hint, self.t)
+
+    def _deliver(self, idx: int, req: Request):
+        self.policy.record(idx)
+        self.engines[idx].submit(req, getattr(req, "_prompt", None))
+
+    def tick(self, arrivals: Sequence[Request] = ()):
+        """Dispatch this tick's arrivals, drain pulls, tick every engine."""
+        if isinstance(self.policy, HashDispatch):
+            # legacy Router semantics: route the whole tick's batch
+            # against pre-delivery state (p2c comparisons unaffected by
+            # same-tick siblings), then deliver
+            for idx, req in [(self.route(r), r) for r in arrivals]:
+                self._deliver(idx, req)
+        else:
+            # state-sensitive policies see each delivery immediately —
+            # a same-tick burst must grow queue_len/outstanding or the
+            # sfs-aware overload bypass could never trigger
+            for req in arrivals:
+                idx = self.route(req)
+                if idx is None:
+                    self.central_queue.append(req)
+                else:
+                    self._deliver(idx, req)
+        # pull drain: submit() updates engine capacity immediately, so the
+        # loop terminates once every engine is lane- or slot-saturated.
+        if self.central_queue and isinstance(self.policy, PullDispatch):
+            while self.central_queue:
+                idx = self.policy.next_puller()
+                if idx is None:
+                    break
+                self._deliver(idx, self.central_queue.popleft())
+        for e in self.engines:
+            e.tick(())
+        self.tick_log.append(
+            (self.t, len(self.central_queue),
+             tuple(e.tick_log[-1][1] for e in self.engines)))
+        self.t += 1
+
+    def run(self, workload: Sequence[Request], max_ticks: int = 1_000_000,
+            prompts: Optional[dict] = None) -> list[Request]:
+        """Drive the cluster over a workload; returns requests rid-sorted."""
+        workload = sorted(workload, key=lambda r: r.arrival)
+        i, n = 0, len(workload)
+        while sum(len(e.finished) for e in self.engines) < n:
+            if self.t > max_ticks:
+                raise RuntimeError(
+                    f"cluster exceeded {max_ticks} ticks "
+                    f"({sum(len(e.finished) for e in self.engines)}/{n})")
+            arrivals = []
+            while i < n and workload[i].arrival <= self.t:
+                r = workload[i]
+                if prompts is not None and r.rid in prompts:
+                    r._prompt = np.asarray(prompts[r.rid])
+                arrivals.append(r)
+                i += 1
+            self.tick(arrivals)
+        out = [r for e in self.engines for r in e.finished]
+        return sorted(out, key=lambda r: r.rid)
+
+    # ------------------------------------------------------------------
+    @property
+    def dispatch_counts(self) -> list[int]:
+        return list(self.policy.dispatch_counts)
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.policy.name,
+            "engines": len(self.engines),
+            "dispatch_counts": self.dispatch_counts,
+            "overload_bypasses": getattr(self.policy, "overload_bypasses",
+                                         0),
+            "ticks": self.t,
+        }

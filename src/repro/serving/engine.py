@@ -83,6 +83,26 @@ class Engine:
             self.by_slot[req.slot] = req
             self.scheduler.on_arrival(req, self.t)
 
+    # -- cluster-dispatch state (repro.core.dispatch.ServerView) -------
+    def outstanding(self) -> int:
+        """Admitted but unfinished requests."""
+        return len(self.by_slot) + len(self.pending_slot)
+
+    def runnable_count(self) -> int:
+        """Requests that could occupy a lane this tick (not stalled)."""
+        n = len(self.pending_slot)
+        for r in self.by_slot.values():
+            if r.stall_until < 0 or r.stall_until <= self.t:
+                n += 1
+        return n
+
+    def free_capacity(self) -> int:
+        """New requests this engine could start running right now —
+        bounded by both free cache slots and idle lanes (pull dispatch)."""
+        slots = len(self.free_slots) - len(self.pending_slot)
+        lanes = self.ecfg.lanes - self.runnable_count()
+        return max(0, min(slots, lanes))
+
     # ------------------------------------------------------------------
     def _run_prefill(self, req: Request):
         """Build this request's cache slot from its prompt (one tick)."""

@@ -19,6 +19,10 @@ class Request:
     prompt_len: int
     n_tokens: int                    # true decode demand (oracle-only info)
     stall_events: tuple = ()         # ((tokens_done, stall_ticks), ...)
+    eta_hint: Optional[int] = None   # front-end demand estimate (ticks),
+                                     # e.g. a max-tokens cap; None=unknown.
+                                     # Used only by cluster dispatch, never
+                                     # by the per-engine schedulers.
 
     # --- engine bookkeeping -------------------------------------------------
     slot: Optional[int] = None

@@ -1,60 +1,38 @@
 """Front-tier router for multi-replica SFS serving (scale-out story).
 
-The paper's global queue saturates around ~100 workers (§VI); its stated
-future work is offloading long functions to lighter-loaded servers.  At pod
-scale we run one SFS engine per model replica and route with
-least-outstanding-work (power-of-two-choices over a consistent hash ring),
-so no replica's global queue grows without bound.
+Historically this was a hard-coded salted-hash power-of-two-choices
+dispatcher; it is now a thin back-compat veneer over
+:mod:`repro.serving.cluster`, which generalizes dispatch to pluggable
+policies (``hash`` — the original behaviour and still the default —
+``least-outstanding``, ``pull``, ``sfs-aware``).  New code should use
+:class:`~repro.serving.cluster.Cluster` directly.
 """
 from __future__ import annotations
 
-import hashlib
-from typing import Sequence
+from typing import Optional, Sequence
 
+from repro.serving.cluster import Cluster, ClusterConfig
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 
 
-def _hash(rid: int, salt: int) -> int:
-    h = hashlib.blake2s(f"{rid}:{salt}".encode(), digest_size=4)
-    return int.from_bytes(h.digest(), "little")
-
-
 class Router:
-    """Power-of-two-choices over consistent hashing."""
+    """Back-compat façade: ``Router(engines)`` == hash-policy Cluster."""
 
-    def __init__(self, engines: Sequence[Engine]):
+    def __init__(self, engines: Sequence[Engine], policy: str = "hash",
+                 cfg: Optional[ClusterConfig] = None):
         self.engines = list(engines)
+        if cfg is None:
+            cfg = ClusterConfig(policy=policy)
+        self.cluster = Cluster(self.engines, cfg)
 
     def outstanding(self, e: Engine) -> int:
-        return len(e.by_slot) + len(e.pending_slot)
+        return e.outstanding()
 
-    def route(self, req: Request) -> int:
-        n = len(self.engines)
-        if n == 1:
-            return 0
-        a = _hash(req.rid, 1) % n
-        b = _hash(req.rid, 2) % n
-        if b == a:
-            b = (a + 1) % n
-        return a if (self.outstanding(self.engines[a])
-                     <= self.outstanding(self.engines[b])) else b
+    def route(self, req: Request) -> Optional[int]:
+        return self.cluster.route(req)
 
-    def run(self, workload: Sequence[Request], max_ticks: int = 1_000_000):
+    def run(self, workload: Sequence[Request],
+            max_ticks: int = 1_000_000) -> list[Request]:
         """Lock-step tick all replicas over a shared arrival stream."""
-        workload = sorted(workload, key=lambda r: r.arrival)
-        i, n = 0, len(workload)
-        done = lambda: sum(len(e.finished) for e in self.engines)
-        t = 0
-        while done() < n:
-            if t > max_ticks:
-                raise RuntimeError("router exceeded max_ticks")
-            buckets: list[list[Request]] = [[] for _ in self.engines]
-            while i < n and workload[i].arrival <= t:
-                buckets[self.route(workload[i])].append(workload[i])
-                i += 1
-            for e, arr in zip(self.engines, buckets):
-                e.tick(arr)
-            t += 1
-        out = [r for e in self.engines for r in e.finished]
-        return sorted(out, key=lambda r: r.rid)
+        return self.cluster.run(workload, max_ticks=max_ticks)

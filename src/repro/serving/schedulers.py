@@ -52,6 +52,25 @@ class Scheduler:
     def _charge(self, rid: int):
         self.reqs[rid].served_ticks += 1
 
+    # -- dispatch-visible state (cluster layer, repro.core.dispatch) ---------
+    def queue_len(self) -> int:
+        """Length of the scheduler's global FIFO queue (0 if none)."""
+        return len(getattr(self, "queue", ()))
+
+    def filter_free(self) -> int:
+        """Lanes with no run-to-completion work bound to them — queued
+        work counts as bound, or a burst routed within one tick would
+        keep looking free."""
+        return max(0, self.lanes - self.active_count() - self.queue_len())
+
+    def active_count(self) -> int:
+        """Requests that would occupy a lane this tick."""
+        raise NotImplementedError
+
+    def fair_load(self) -> int:
+        """Size of the fair-share pool (demoted/long work)."""
+        return 0
+
 
 class FIFOScheduler(Scheduler):
     name = "fifo"
@@ -89,6 +108,9 @@ class FIFOScheduler(Scheduler):
     def on_wake(self, rid: int, t: int):
         self.reqs[rid].queue_enter = t
         self.queue.append(rid)
+
+    def active_count(self) -> int:
+        return len(self.running)
 
 
 class CFSScheduler(Scheduler):
@@ -144,6 +166,12 @@ class CFSScheduler(Scheduler):
         r.vruntime = max(r.vruntime, self.min_vruntime)
         self.runnable.add(rid)
 
+    def active_count(self) -> int:
+        return min(self.lanes, len(self.runnable))
+
+    def fair_load(self) -> int:
+        return len(self.runnable)
+
 
 class SRTFScheduler(Scheduler):
     """Offline oracle: preemptive shortest-remaining-demand-first."""
@@ -185,6 +213,9 @@ class SRTFScheduler(Scheduler):
 
     def on_wake(self, rid: int, t: int):
         self.runnable.add(rid)
+
+    def active_count(self) -> int:
+        return min(self.lanes, len(self.runnable))
 
 
 class SFSScheduler(Scheduler):
@@ -300,6 +331,12 @@ class SFSScheduler(Scheduler):
         else:
             r.queue_enter = t
             self.queue.append(rid)
+
+    def active_count(self) -> int:
+        return len(self.filter_running)
+
+    def fair_load(self) -> int:
+        return len(self.cfs.runnable)
 
 
 def make_scheduler(policy: str, lanes: int, **kw) -> Scheduler:

@@ -1,0 +1,167 @@
+"""Deterministic stand-in for the slice of the `hypothesis` API these
+tests use, registered by ``conftest.py`` when the real package is absent
+(the CI image does not ship it; see requirements-dev.txt).
+
+Differences from real hypothesis — acceptable for this repo's usage:
+
+* examples are drawn from a PRNG seeded by the test name, so runs are
+  reproducible but there is no shrinking and no example database;
+* the first example is always the strategy's lower bound (integers /
+  floats) or first element (sampled_from), so each property is exercised
+  at the boundary every run;
+* ``deadline`` and health checks are ignored.
+
+Covers: ``given`` (keyword strategies), ``settings(max_examples=...,
+deadline=...)``, ``assume``, and ``strategies.integers / floats /
+booleans / sampled_from / lists``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__version__ = "0.stub"
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+class SearchStrategy:
+    def example_for(self, rng: np.random.Generator, index: int):
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example_for(self, rng, index):
+        if index == 0:
+            return self.lo
+        if index == 1:
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example_for(self, rng, index):
+        if index == 0:
+            return self.lo
+        if index == 1:
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example_for(self, rng, index):
+        if index < len(self.elements):
+            return self.elements[index]
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class _Booleans(_SampledFrom):
+    def __init__(self):
+        super().__init__([False, True])
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example_for(self, rng, index):
+        size = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example_for(rng, 2) for _ in range(size)]
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None):
+        return _Lists(elements, min_size, max_size)
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    assert not arg_strategies, "stub supports keyword strategies only"
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            drawn = 0
+            attempts = 0
+            while drawn < n and attempts < 20 * n:
+                ex = {name: strat.example_for(rng, drawn)
+                      for name, strat in kw_strategies.items()}
+                attempts += 1
+                try:
+                    fn(*args, **kwargs, **ex)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__qualname__}): "
+                        f"{ex!r}") from e
+                drawn += 1
+            return None
+        # hide the property args from pytest's fixture resolution: only
+        # parameters NOT drawn by a strategy remain in the signature
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in kw_strategies]
+        del wrapper.__wrapped__
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    filter_too_much = "filter_too_much"
+    all = staticmethod(lambda: [])

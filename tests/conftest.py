@@ -4,3 +4,15 @@ import sys
 # allow `pytest tests/` without PYTHONPATH=src
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# Property tests use hypothesis, which the base image may not ship (it is
+# listed in requirements-dev.txt).  Rather than skipping 5 of the 10 test
+# modules, fall back to the deterministic API-compatible stub so the
+# properties still run (bounded examples, no shrinking).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies

@@ -1,0 +1,65 @@
+"""Scheduler/simulator agreement: the paper's headline claim — SFS
+improves short-function turnaround over CFS — must hold in BOTH
+execution models (tick-engine serving scheduler and discrete-event
+simulator), as a cross-layer regression test."""
+import numpy as np
+
+from repro.core import FaaSBenchConfig, SimConfig, generate, simulate
+from repro.core.metrics import result_bucket_stats
+from repro.serving import Engine, EngineConfig, Request
+
+SHORT_TICKS = 10          # tick-engine short bucket (tokens)
+SHORT_S = 0.1             # DES short bucket (seconds, Azure Table I)
+
+
+def tick_workload(n=150, lanes=4, load=1.0, seed=5, short_frac=0.8):
+    rng = np.random.default_rng(seed)
+    svc = np.where(rng.random(n) < short_frac,
+                   rng.integers(2, 8, n), rng.integers(30, 80, n))
+    span = svc.sum() / (load * lanes)
+    iats = rng.exponential(1.0, n)
+    arr = np.cumsum(iats * span / iats.sum()).astype(int)
+    return [Request(rid=i, arrival=int(arr[i]), prompt_len=4,
+                    n_tokens=int(svc[i])) for i in range(n)]
+
+
+def _short_p50_engine(policy, seed):
+    eng = Engine(EngineConfig(lanes=4, n_slots=256, policy=policy))
+    done = eng.run(tick_workload(seed=seed), max_ticks=2_000_000)
+    ta = np.array([r.turnaround for r in done
+                   if r.service_demand < SHORT_TICKS])
+    return float(np.median(ta))
+
+
+def _short_p50_des(policy, seed):
+    reqs = generate(FaaSBenchConfig(n_requests=2000, cores=12, load=1.0,
+                                    seed=seed))
+    res = simulate(reqs, SimConfig(cores=12, policy=policy))
+    ta = np.array([s.turnaround for s in res.stats
+                   if s.service < SHORT_S])
+    return float(np.median(ta))
+
+
+def test_sfs_improves_short_p50_in_both_layers():
+    for seed in (5, 6):
+        engine_sfs = _short_p50_engine("sfs", seed)
+        engine_cfs = _short_p50_engine("cfs", seed)
+        assert engine_sfs <= engine_cfs, (seed, engine_sfs, engine_cfs)
+    for seed in (5, 6):
+        des_sfs = _short_p50_des("sfs", seed)
+        des_cfs = _short_p50_des("cfs", seed)
+        assert des_sfs < des_cfs, (seed, des_sfs, des_cfs)
+
+
+def test_sfs_improves_short_p99_in_des_bucket_stats():
+    """Same claim through the shared bucket-stats helper (what the
+    cluster sweep reports), at the paper's 100% load point."""
+    reqs = generate(FaaSBenchConfig(n_requests=2000, cores=12, load=1.0,
+                                    seed=9))
+    out = {}
+    for policy in ("sfs", "cfs"):
+        res = simulate(reqs, SimConfig(cores=12, policy=policy))
+        out[policy] = result_bucket_stats(res)
+    short = f"<{SHORT_S:g}s"
+    assert out["sfs"][short]["p99"] < out["cfs"][short]["p99"]
+    assert out["sfs"][short]["mean_rte"] > out["cfs"][short]["mean_rte"]

@@ -1,0 +1,188 @@
+"""Cluster dispatch layer: routing invariants, pull work conservation,
+golden parity with the single engine, DES cross-validation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterSimConfig, FaaSBenchConfig, SimConfig,
+                        generate, simulate, simulate_cluster)
+from repro.core.dispatch import POLICIES
+from repro.serving import (Cluster, ClusterConfig, Engine, EngineConfig,
+                           Request)
+
+
+def workload(n=60, lanes=4, load=1.0, seed=0, short_frac=0.8,
+             stalls=False, hints=True):
+    rng = np.random.default_rng(seed)
+    svc = np.where(rng.random(n) < short_frac,
+                   rng.integers(2, 8, n), rng.integers(30, 80, n))
+    span = svc.sum() / (load * lanes)
+    iats = rng.exponential(1.0, n)
+    arr = np.cumsum(iats * span / iats.sum()).astype(int)
+    reqs = []
+    for i in range(n):
+        ev = ((1, int(rng.integers(2, 8))),) if stalls and \
+            rng.random() < 0.4 and svc[i] > 3 else ()
+        reqs.append(Request(rid=i, arrival=int(arr[i]), prompt_len=4,
+                            n_tokens=int(svc[i]), stall_events=ev,
+                            eta_hint=int(svc[i]) + 1 if hints else None))
+    return reqs
+
+
+def make_cluster(policy, n_engines, lanes=2, n_slots=64):
+    engines = [Engine(EngineConfig(lanes=lanes, n_slots=n_slots,
+                                   policy="sfs"))
+               for _ in range(n_engines)]
+    return Cluster(engines, ClusterConfig(policy=policy))
+
+
+# ---------------------------------------------------------------------------
+# Invariants: nothing lost, nothing duplicated
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 100), policy=st.sampled_from(POLICIES),
+       n_engines=st.integers(1, 4), stalls=st.booleans())
+def test_no_request_lost_or_duplicated(seed, policy, n_engines, stalls):
+    n = 50
+    cluster = make_cluster(policy, n_engines)
+    done = cluster.run(workload(n=n, lanes=2 * n_engines, seed=seed,
+                                stalls=stalls),
+                       max_ticks=2_000_000)
+    assert [r.rid for r in done] == list(range(n))
+    # each request finished on exactly one engine
+    per_engine = [sorted(r.rid for r in e.finished)
+                  for e in cluster.engines]
+    all_rids = sorted(rid for rids in per_engine for rid in rids)
+    assert all_rids == list(range(n))
+    assert sum(cluster.dispatch_counts) == n
+    assert not cluster.central_queue
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), n_engines=st.integers(1, 4),
+       lanes=st.integers(1, 4))
+def test_pull_work_conservation(seed, n_engines, lanes):
+    """Under pull dispatch no engine idles while the central queue is
+    non-empty (slots are ample and the workload never stalls, so an
+    engine that runs < lanes requests could have pulled)."""
+    cluster = make_cluster("pull", n_engines, lanes=lanes, n_slots=128)
+    cluster.run(workload(n=40, lanes=lanes * n_engines, seed=seed),
+                max_ticks=2_000_000)
+    for t, central_qlen, actives in cluster.tick_log:
+        if central_qlen > 0:
+            assert all(a == lanes for a in actives), \
+                (t, central_qlen, actives)
+
+
+def test_overload_bypass_fires_under_burst():
+    reqs = [Request(rid=i, arrival=0, prompt_len=4, n_tokens=4,
+                    eta_hint=5) for i in range(300)]
+    cluster = make_cluster("sfs-aware", 2, lanes=2, n_slots=256)
+    cluster.run(reqs, max_ticks=1_000_000)
+    assert cluster.summary()["overload_bypasses"] > 0
+
+
+def test_sfs_aware_separates_eta_classes():
+    """With idle engines, long-ETA requests avoid the engine that is
+    busy with FILTER work, while a short request goes to it only if it
+    is the most FILTER-free."""
+    cluster = make_cluster("sfs-aware", 2, lanes=2, n_slots=64)
+    e0, e1 = cluster.engines
+    # occupy engine 0's FILTER lanes
+    for i in range(2):
+        e0.submit(Request(rid=100 + i, arrival=0, prompt_len=4,
+                          n_tokens=50))
+    long_req = Request(rid=0, arrival=0, prompt_len=4, n_tokens=1000,
+                       eta_hint=1000)
+    short_req = Request(rid=1, arrival=0, prompt_len=4, n_tokens=2,
+                        eta_hint=2)
+    assert cluster.route(long_req) == 1
+    assert cluster.route(short_req) == 1   # e1 is the FILTER-free engine
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: hash over 1 engine == the engine alone
+# ---------------------------------------------------------------------------
+
+
+def _fingerprint(reqs):
+    return [(r.rid, r.finish, r.served_ticks, r.n_ctx, r.demoted)
+            for r in reqs]
+
+
+def test_hash_batch_routes_same_tick_against_pre_delivery_state():
+    """Legacy Router parity: all of a tick's arrivals are routed before
+    any is delivered, so two same-tick requests that p2c-hash to the
+    same engine both land there (the first delivery must not divert the
+    second)."""
+    cluster = make_cluster("hash", 2, lanes=2, n_slots=64)
+    # find two rids whose p2c choice agrees while both engines are empty
+    probe = [Request(rid=i, arrival=0, prompt_len=4, n_tokens=4)
+             for i in range(20)]
+    picks = {r.rid: cluster.route(r) for r in probe}
+    target = picks[probe[0].rid]
+    pair = [r for r in probe if picks[r.rid] == target][:2]
+    assert len(pair) == 2
+    cluster.tick(pair)
+    assert all(r.rid in {q.rid for q in
+                         cluster.engines[target].by_slot.values()}
+               for r in pair)
+
+
+def test_hash_single_engine_matches_engine_run():
+    kw = dict(n=80, lanes=4, seed=11, stalls=True)
+    solo = Engine(EngineConfig(lanes=4, n_slots=64, policy="sfs"))
+    ref = solo.run(workload(**kw), max_ticks=2_000_000)
+    cluster = make_cluster("hash", 1, lanes=4, n_slots=64)
+    got = cluster.run(workload(**kw), max_ticks=2_000_000)
+    assert _fingerprint(got) == _fingerprint(ref)
+
+
+# ---------------------------------------------------------------------------
+# DES multi-server mode
+# ---------------------------------------------------------------------------
+
+
+def test_des_single_server_hash_matches_simulate():
+    reqs = generate(FaaSBenchConfig(n_requests=800, cores=4, load=0.9,
+                                    seed=1))
+    single = simulate(reqs, SimConfig(cores=4, policy="sfs"))
+    clus = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=1, dispatch="hash",
+        server=SimConfig(cores=4, policy="sfs")))
+    a = [(s.rid, s.finish, s.n_ctx, s.demoted) for s in single.stats]
+    b = [(s.rid, s.finish, s.n_ctx, s.demoted)
+         for s in clus.merged.stats]
+    assert a == b
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_des_cluster_completes_all(policy):
+    n = 1000
+    reqs = generate(FaaSBenchConfig(n_requests=n, cores=12, load=0.9,
+                                    seed=2, io_fraction=0.2))
+    res = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=3, dispatch=policy,
+        server=SimConfig(cores=4, policy="sfs")))
+    assert [s.rid for s in res.merged.stats] == list(range(n))
+    assert sum(res.dispatch_counts) == n
+    per_server = sum(len(r.stats) for r in res.per_server)
+    assert per_server == n
+    for s in res.merged.stats:
+        assert s.turnaround > 0
+
+
+def test_des_pull_prefers_idle_servers():
+    """Two far-apart arrivals: with pull dispatch the second lands on an
+    idle server immediately (no central wait), so its turnaround equals
+    the single-server run-to-completion time."""
+    from repro.core.workload import Request as CoreRequest
+    reqs = [CoreRequest(rid=0, arrival=0.0, service=0.05),
+            CoreRequest(rid=1, arrival=1.0, service=0.05)]
+    res = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=2, dispatch="pull",
+        server=SimConfig(cores=1, policy="sfs")))
+    for s in res.merged.stats:
+        assert s.turnaround == pytest.approx(0.05 + 100e-6, abs=1e-9)

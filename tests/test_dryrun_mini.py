@@ -49,8 +49,8 @@ MINI_SCRIPT = textwrap.dedent("""
     from repro.launch.dryrun import build_cell, collective_census
     from repro.sharding.plan import use_plan
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     for arch, shape in [("qwen2.5-3b", "train_4k"),
                         ("mamba2-1.3b", "decode_32k"),
                         ("qwen3-moe-30b-a3b", "prefill_32k")]:

@@ -39,8 +39,8 @@ ELASTIC_SCRIPT = textwrap.dedent("""
 
     cfg = get_reduced("qwen2.5-3b").replace(dtype="float32")
     opt = adamw(lr=1e-3)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     plan = Plan(mesh=mesh, fsdp=False)
     dc = DataConfig(vocab=cfg.vocab, seq_len=16, global_batch=8, seed=0)
 
