@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-smoke bench
+.PHONY: test test-fast bench-smoke bench-predict bench
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -16,6 +16,11 @@ test-fast:
 # <60 s cluster-dispatch smoke check (asserts the short-P99 headline)
 bench-smoke:
 	$(PY) benchmarks/cluster_sweep.py --smoke
+
+# <60 s duration-predictor smoke check (asserts history <= blind on
+# short P99 and the oracle == hinted=True bit-exact back-compat)
+bench-predict:
+	$(PY) benchmarks/predict_sweep.py --smoke
 
 # full benchmark suite (paper figures + cluster sweep)
 bench:

@@ -12,8 +12,8 @@ import time
 
 from benchmarks import (cluster_sweep, fig1_duration_cdf, fig2_policies,
                         fig6_7_load_sweep, fig9_10_timeslice, fig11_io,
-                        fig12_overload, roofline, serving_e2e,
-                        table2_overhead)
+                        fig12_overload, predict_sweep, roofline,
+                        serving_e2e, table2_overhead)
 
 SUITES = {
     "fig1": fig1_duration_cdf,
@@ -26,6 +26,7 @@ SUITES = {
     "serving": serving_e2e,
     "roofline": roofline,
     "cluster": cluster_sweep,
+    "predict": predict_sweep,
 }
 
 

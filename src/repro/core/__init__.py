@@ -5,6 +5,7 @@ Public API:
   simulator.SimConfig / simulate       — discrete-event multicore simulator
   simulator.ClusterSimConfig / simulate_cluster — multi-server mode
   dispatch.make_dispatch               — cluster dispatch policies
+  predict.make_predictor / EtaPredictor — online duration prediction
   policies.{sfs,cfs,fifo,rr,srtf,ideal} — policy constructors
   metrics                              — RTE / turnaround / headline stats
 """
@@ -12,10 +13,12 @@ from repro.core.workload import FaaSBenchConfig, Request, generate
 from repro.core.simulator import (ClusterSimConfig, ClusterSimResult,
                                   SimConfig, SimResult, JobStats, simulate,
                                   simulate_cluster)
-from repro.core.dispatch import make_dispatch
-from repro.core import dispatch, policies, metrics
+from repro.core.dispatch import make_dispatch, route_hinted
+from repro.core.predict import EtaPredictor, make_predictor
+from repro.core import dispatch, policies, predict, metrics
 
 __all__ = ["FaaSBenchConfig", "Request", "generate", "SimConfig",
            "SimResult", "JobStats", "simulate", "ClusterSimConfig",
            "ClusterSimResult", "simulate_cluster", "make_dispatch",
-           "dispatch", "policies", "metrics"]
+           "route_hinted", "EtaPredictor", "make_predictor",
+           "dispatch", "policies", "predict", "metrics"]

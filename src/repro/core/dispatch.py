@@ -221,6 +221,22 @@ class SFSAwareDispatch(DispatchPolicy):
 POLICIES = ("hash", "least-outstanding", "pull", "sfs-aware")
 
 
+def route_hinted(policy: DispatchPolicy, predictor, rid: int, func_id,
+                 true_eta: Optional[float], t: float):
+    """The single predictor->dispatch entry point, shared by the
+    tick-engine ``Cluster`` and the DES ``ClusterSimulator`` (no
+    engine-specific predictor code paths).
+
+    ``predictor`` is a :class:`repro.core.predict.EtaPredictor`;
+    ``true_eta`` is the ground-truth demand known to the owner (consumed
+    only by the oracle — learned predictors see ``func_id`` alone).
+    Returns ``(server index or None, eta used for routing)`` so owners
+    can log the estimate against the eventual true duration.
+    """
+    eta = predictor.estimate(func_id, true_eta)
+    return policy.route(rid, eta, t), eta
+
+
 def make_dispatch(policy: str, views: Sequence[ServerView],
                   **kw) -> DispatchPolicy:
     cls = {"hash": HashDispatch,

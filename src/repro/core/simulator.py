@@ -34,7 +34,9 @@ import math
 from collections import deque
 from typing import Optional
 
-from repro.core.dispatch import PullDispatch, ServerView, make_dispatch
+from repro.core.dispatch import (PullDispatch, ServerView, make_dispatch,
+                                 route_hinted)
+from repro.core.predict import make_predictor
 from repro.core.workload import Request
 
 _EPS = 1e-12
@@ -57,6 +59,12 @@ class SimConfig:
     overload_factor: Optional[float] = 3.0   # O; None disables §V-E bypass
     io_aware: bool = True             # §V-D polling on/off
     poll_interval_s: float = 0.004    # 4 ms
+    # hinted demotion: a request delivered with an ETA hint > S skips
+    # FILTER straight to CFS on arrival — no wasted slice S, no demotion
+    # context switch.  Hints arrive via inject(eta=...), i.e. only in
+    # cluster mode from the dispatch-level predictor; without a hint the
+    # arrival path is unchanged (FILTER optimism).
+    hinted_demotion: bool = False
     # --- RR ---
     rr_quantum_s: float = 0.100       # Linux SCHED_RR default
     # --- CFS ---
@@ -186,6 +194,18 @@ class Simulator:
         self._arrivals_since_update = 0
         self.slice_timeline: list = [(0.0, self.S)]
         self.srtf_wait: list = []        # heap (remaining, seq, job)
+        # cluster-mode plumbing: per-rid ETA hints delivered alongside
+        # inject(), and a completion callback (req, finish_time) through
+        # which the owner feeds its duration predictor — the feedback
+        # loop only ever sees *finished* requests.
+        self.eta_hints: dict[int, float] = {}
+        self.on_finish = None
+
+    def _finish_job(self, job: _Job):
+        job.finish = self.now
+        self.finished += 1
+        if self.on_finish is not None:
+            self.on_finish(job.req, self.now)
 
     # -- event plumbing -----------------------------------------------------
     def _push(self, t: float, kind: str, *data):
@@ -201,15 +221,20 @@ class Simulator:
         self.now, _, kind, data = heapq.heappop(self.events)
         getattr(self, "_ev_" + kind)(*data)
 
-    def inject(self, req: Request, t: Optional[float] = None):
+    def inject(self, req: Request, t: Optional[float] = None,
+               eta: Optional[float] = None):
         """Cluster mode: deliver a request to this server at time ``t``.
 
         ``req.arrival`` keeps the *cluster* arrival time, so turnaround
-        measured from it includes any central-queue wait before delivery.
+        measured from it includes any central-queue wait (and dispatch
+        latency) before delivery.  ``eta`` is the dispatch tier's
+        duration estimate, consumed by ``hinted_demotion``.
         """
         assert self.cfg.policy != "ideal", "ideal has no event loop"
         t = self.now if t is None else t
         self.reqs.append(req)
+        if eta is not None:
+            self.eta_hints[req.rid] = eta
         kind = "s_arrival" if self.cfg.policy == "srtf" else "arrival"
         self._push(t, kind, req)
 
@@ -304,8 +329,7 @@ class Simulator:
             return
         job = self._srtf_preempt(core)   # accounts cpu, frees core
         if job.to_completion() <= _EPS:
-            job.finish = self.now
-            self.finished += 1
+            self._finish_job(job)
         elif job.to_next_io() <= _EPS:
             dur = job.next_io_dur()
             job.io_idx += 1
@@ -329,10 +353,15 @@ class Simulator:
         self._observe_arrival(req.arrival)
         if self.cfg.policy == "cfs":
             self._cfs_enqueue(job)
-            self._dispatch(self.now)
+        elif (self.cfg.policy == "sfs" and self.cfg.hinted_demotion
+                and self.eta_hints.get(req.rid, 0.0) > self.S):
+            # predicted-long: skip FILTER straight to CFS — saves the
+            # wasted slice S and the demotion context switch
+            job.demoted = True
+            self._cfs_enqueue(job)
         else:
             self._enqueue_global(job)
-            self._dispatch(self.now)
+        self._dispatch(self.now)
 
     def _observe_arrival(self, t: float):
         if self.cfg.policy != "sfs" or self.cfg.slice_s is not None:
@@ -428,8 +457,7 @@ class Simulator:
         used = max(self.now - core.seg_start, 0.0)
         job = self._filter_release(core, used)
         if job.to_completion() <= _EPS:                      # 4.1 done
-            job.finish = self.now
-            self.finished += 1
+            self._finish_job(job)
         elif job.slice_left is not None and job.slice_left <= _EPS:
             job.n_ctx += 1
             self.n_ctx_total += 1
@@ -568,8 +596,7 @@ class Simulator:
         core.token += 1
         core.job, core.state = None, "idle"
         if cause == "done" or job.to_completion() <= _EPS:
-            job.finish = self.now
-            self.finished += 1
+            self._finish_job(job)
         elif cause == "io" or job.to_next_io() <= _EPS:
             dur = job.next_io_dur()
             job.io_idx += 1
@@ -611,7 +638,15 @@ def simulate(requests, cfg: SimConfig) -> SimResult:
 
 
 class _SimView(ServerView):
-    """Dispatch-visible scheduling state of one DES server."""
+    """Dispatch-visible scheduling state of one DES server.
+
+    Under nonzero dispatch latency the server's own state is stale by
+    design (a routed request only arrives ``dispatch_latency_s`` later),
+    but the *router* always knows what it already sent: in-flight
+    requests count against idle capacity and spill into the estimated
+    FILTER queue.  With zero latency in-flight is always empty, so these
+    corrections reduce exactly to the PR 1 views (bit-exact).
+    """
 
     def __init__(self, sim: Simulator):
         self.sim = sim
@@ -620,21 +655,26 @@ class _SimView(ServerView):
     def lanes(self) -> int:
         return self.sim.cfg.cores
 
+    def _in_flight(self) -> int:
+        # injected (reqs) but not yet arrived (jobs is keyed at arrival)
+        return len(self.sim.reqs) - len(self.sim.jobs)
+
     def outstanding(self) -> int:
         return len(self.sim.reqs) - self.sim.finished
 
     def filter_free(self) -> int:
-        return self.sim.idle_cores()
+        return max(0, self.sim.idle_cores() - self._in_flight())
 
     def fair_load(self) -> int:
         return len(self.sim.cfs_rq) + sum(1 for c in self.sim.cores
                                           if c.state == "cfs")
 
     def queue_len(self) -> int:
-        return len(self.sim.global_queue)
+        spill = max(0, self._in_flight() - self.sim.idle_cores())
+        return len(self.sim.global_queue) + spill
 
     def capacity(self) -> int:
-        return self.sim.idle_cores()
+        return max(0, self.sim.idle_cores() - self._in_flight())
 
 
 @dataclasses.dataclass
@@ -642,9 +682,16 @@ class ClusterSimConfig:
     n_servers: int = 4
     dispatch: str = "hash"       # hash | least-outstanding | pull | sfs-aware
     server: SimConfig = dataclasses.field(default_factory=SimConfig)
-    # eta hints: the front-end knows each request's service demand (e.g. a
-    # max-tokens cap / duration predictor).  False = dispatch flies blind.
-    hinted: bool = True
+    # duration predictor feeding dispatch its ETA hints
+    # (repro.core.predict): "oracle" = the front-end knows each
+    # request's true service demand (PR 1's hinted=True), "none" =
+    # dispatch flies blind (hinted=False), "history" / "class" = learned
+    # online from finished requests.  Also accepts an EtaPredictor
+    # instance (shared / pre-trained) or a "name:key=val,..." spec.
+    predictor: object = "oracle"
+    # router -> server network delay: a routed request is injected at
+    # arrival + this, so online policies route on slightly stale state
+    dispatch_latency_s: float = 0.0
     # sfs-aware cluster knobs (units: seconds, like the per-server S)
     overload_factor: float = 3.0
     adaptive_window: int = 100
@@ -658,6 +705,13 @@ class ClusterSimResult:
     dispatch_counts: list
     policy: str
     overload_bypasses: int = 0
+    predictor: str = "oracle"
+    # rid -> eta used at routing time (None = no estimate), for
+    # prediction-error accounting against the true durations
+    eta_log: dict = dataclasses.field(default_factory=dict)
+    # the dispatch policy's final adaptive slice S (sfs-aware only) —
+    # the short/long boundary for misclassification accounting
+    dispatch_S: Optional[float] = None
 
 
 class ClusterSimulator:
@@ -669,6 +723,11 @@ class ClusterSimulator:
     pull, sfs-aware) observe each server's true state at dispatch time.
     With ``n_servers=1`` and ``hash`` dispatch this reduces exactly to
     the single :class:`Simulator` (cross-validated in tests).
+
+    ETA hints come from ``cfg.predictor`` (repro.core.predict) through
+    the shared :func:`repro.core.dispatch.route_hinted` entry point; the
+    feedback loop closes on each server's completion callback, so
+    learned predictors only ever observe *finished* requests.
     """
 
     def __init__(self, requests, cfg: ClusterSimConfig):
@@ -676,8 +735,11 @@ class ClusterSimulator:
             raise ValueError("per-server policy 'ideal' has no event loop")
         self.reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
         self.cfg = cfg
+        self.predictor = make_predictor(cfg.predictor)
         self.servers = [Simulator([], dataclasses.replace(cfg.server))
                         for _ in range(cfg.n_servers)]
+        for s in self.servers:
+            s.on_finish = self._observe_finish
         views = [_SimView(s) for s in self.servers]
         kw = {}
         if cfg.dispatch == "sfs-aware":
@@ -685,15 +747,22 @@ class ClusterSimulator:
                       adaptive_window=cfg.adaptive_window,
                       slice_init=cfg.slice_init_s)
         self.policy = make_dispatch(cfg.dispatch, views, **kw)
-        self.central: deque = deque()
+        self.central: deque = deque()          # (req, eta) under pull
+        self.eta_log: dict[int, Optional[float]] = {}
 
     # ------------------------------------------------------------------
-    def _deliver(self, idx: int, req: Request, t: float):
+    def _observe_finish(self, req: Request, t: float):
+        self.predictor.observe(req.func_id, req.service)
+
+    def _deliver(self, idx: int, req: Request, t: float,
+                 eta: Optional[float] = None):
         self.policy.record(idx)
         srv = self.servers[idx]
-        srv.inject(req, t)
+        srv.inject(req, t + self.cfg.dispatch_latency_s, eta=eta)
         # process the due events now so the server's capacity/outstanding
-        # reflect the delivery before the next dispatch decision
+        # reflect the delivery before the next dispatch decision (under
+        # dispatch latency the arrival itself stays in flight until t +
+        # latency — the policy's view is stale by design)
         while srv.next_event_time() <= t:
             srv.step()
 
@@ -704,7 +773,8 @@ class ClusterSimulator:
             idx = self.policy.next_puller()
             if idx is None:
                 break
-            self._deliver(idx, self.central.popleft(), t)
+            req, eta = self.central.popleft()
+            self._deliver(idx, req, t, eta)
 
     def run(self) -> ClusterSimResult:
         i, n = 0, len(self.reqs)
@@ -715,12 +785,14 @@ class ClusterSimulator:
             if t_arr <= t_srv and t_arr < _INF:
                 req = self.reqs[i]
                 i += 1
-                eta = req.service if self.cfg.hinted else None
-                idx = self.policy.route(req.rid, eta, req.arrival)
+                idx, eta = route_hinted(self.policy, self.predictor,
+                                        req.rid, req.func_id, req.service,
+                                        req.arrival)
+                self.eta_log[req.rid] = eta
                 if idx is None:
-                    self.central.append(req)
+                    self.central.append((req, eta))
                 else:
-                    self._deliver(idx, req, req.arrival)
+                    self._deliver(idx, req, req.arrival, eta)
                 self._drain_pull(req.arrival)
             elif t_srv < _INF:
                 srv = min(self.servers, key=Simulator.next_event_time)
@@ -736,6 +808,9 @@ class ClusterSimulator:
             dispatch_counts=list(self.policy.dispatch_counts),
             policy=self.policy.name,
             overload_bypasses=getattr(self.policy, "overload_bypasses", 0),
+            predictor=self.predictor.name,
+            eta_log=dict(self.eta_log),
+            dispatch_S=getattr(self.policy, "S", None),
         )
 
 
@@ -744,14 +819,22 @@ def _merge_results(results) -> SimResult:
                    key=lambda s: s.rid)
     qd = sorted((q for r in results for q in r.queue_delay_timeline),
                 key=lambda x: x[0])
+    if len(results) == 1:
+        # single server: keep the (time, S) shape of SimResult
+        slice_tl = list(results[0].slice_timeline)
+    else:
+        # interleave per-server adaptive-S traces by time, tagged with
+        # the server index: (time, S, server)
+        slice_tl = sorted(((t, s, i) for i, r in enumerate(results)
+                           for (t, s) in r.slice_timeline),
+                          key=lambda x: (x[0], x[2]))
     return SimResult(
         stats=stats,
         busy_time=sum(r.busy_time for r in results),
         makespan=max((r.makespan for r in results), default=0.0),
         n_ctx_total=sum(r.n_ctx_total for r in results),
         queue_delay_timeline=qd,
-        slice_timeline=results[0].slice_timeline if len(results) == 1
-        else [],
+        slice_timeline=slice_tl,
     )
 
 

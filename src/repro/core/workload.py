@@ -41,6 +41,10 @@ class Request:
     arrival: float                      # seconds since workload start
     service: float                      # total CPU demand, seconds
     io_events: tuple = ()               # ((cpu_offset, io_dur), ...)
+    func_id: int = 0                    # which app/function this invokes —
+                                        # the key duration predictors learn
+                                        # on (repro.core.predict); 0 for
+                                        # legacy anonymous workloads
 
     @property
     def total_io(self) -> float:
@@ -93,6 +97,66 @@ def _sample_durations(rng: np.random.Generator, n: int,
 
 
 # ---------------------------------------------------------------------------
+# Per-function duration model (duration-predictor workloads)
+# ---------------------------------------------------------------------------
+
+
+def function_table(n_functions: int, table: Sequence = AZURE_TABLE_I):
+    """Partition a duration table into ``n_functions`` app models.
+
+    Functions are apportioned to Table-I buckets by bucket mass (largest
+    remainder, at least one per bucket), and the functions of a bucket
+    split its [lo, hi) range into equal log-width sub-ranges.  Each
+    function's invocations are log-uniform within its own narrow
+    sub-range — stable per-function durations (what execution-history
+    predictors exploit, per Przybylski et al.) while the *aggregate*
+    duration distribution stays exactly the table's: bucket masses are
+    unchanged, and uniform function choice over equal log-segments
+    composes back to log-uniform within each bucket.
+
+    Returns ``(lo_ms, hi_ms, bucket, offset)`` arrays: per-function
+    sub-range and bucket, plus ``offset[b]`` = first func_id of bucket b.
+    """
+    k = len(table)
+    if n_functions < k:
+        raise ValueError(f"n_functions={n_functions} < {k} buckets — "
+                         "need at least one function per bucket")
+    probs = np.array([p for p, _, _ in table], dtype=np.float64)
+    probs = probs / probs.sum()
+    counts = np.ones(k, dtype=int)
+    quota = probs * (n_functions - k)
+    counts += quota.astype(int)
+    frac = quota - quota.astype(int)
+    for b in np.argsort(-frac)[:n_functions - counts.sum()]:
+        counts[b] += 1
+    lo_f, hi_f, bucket_f = [], [], []
+    for b, (_, lo, hi) in enumerate(table):
+        edges = np.exp(np.linspace(np.log(lo), np.log(hi), counts[b] + 1))
+        lo_f += list(edges[:-1])
+        hi_f += list(edges[1:])
+        bucket_f += [b] * counts[b]
+    offset = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    return (np.array(lo_f), np.array(hi_f), np.array(bucket_f, dtype=int),
+            offset)
+
+
+def _sample_durations_per_function(rng: np.random.Generator, n: int,
+                                   table: Sequence, n_functions: int):
+    """Sample ``(service_s, func_id)`` under the per-function model."""
+    lo_f, hi_f, _, offset = function_table(n_functions, table)
+    probs = np.array([p for p, _, _ in table], dtype=np.float64)
+    probs = probs / probs.sum()
+    counts = np.diff(np.concatenate((offset, [n_functions])))
+    bucket = rng.choice(len(table), size=n, p=probs)
+    func = offset[bucket] + (rng.random(n)
+                             * counts[bucket]).astype(int)
+    u = rng.random(n)
+    ms = np.exp(np.log(lo_f[func])
+                + u * (np.log(hi_f[func]) - np.log(lo_f[func])))
+    return ms / 1e3, func
+
+
+# ---------------------------------------------------------------------------
 # FaaSBench generator
 # ---------------------------------------------------------------------------
 
@@ -107,6 +171,11 @@ class FaaSBenchConfig:
     io_fraction: float = 0.0             # fraction of requests with an I/O op
     io_ms_range: tuple = (10.0, 100.0)
     seed: int = 0
+    # per-function app model: partition the duration table into this many
+    # functions (predictable per-function durations, same aggregate
+    # distribution) and stamp func_id on each request.  0 = legacy
+    # anonymous workload (func_id 0 everywhere, identical RNG stream).
+    n_functions: int = 0
     # trace-IAT burstiness (Fig. 12): lognormal sigma and spike injection
     trace_sigma: float = 1.6
     n_spikes: int = 5
@@ -118,7 +187,12 @@ def generate(cfg: FaaSBenchConfig) -> list[Request]:
     """Generate a reproducible FaaS workload."""
     rng = np.random.default_rng(cfg.seed)
     n = cfg.n_requests
-    service = _sample_durations(rng, n, cfg.duration_table)
+    if cfg.n_functions > 0:
+        service, func_ids = _sample_durations_per_function(
+            rng, n, cfg.duration_table, cfg.n_functions)
+    else:
+        service = _sample_durations(rng, n, cfg.duration_table)
+        func_ids = np.zeros(n, dtype=int)
     mean_service = float(service.mean())
 
     # lambda = rho * c / E[S]  (Eq. 2 of the paper, solved for arrival rate)
@@ -160,7 +234,8 @@ def generate(cfg: FaaSBenchConfig) -> list[Request]:
     for i in range(n):
         io = ((0.0, float(io_dur[i])),) if has_io[i] else ()
         out.append(Request(rid=i, arrival=float(arrivals[i]),
-                           service=float(service[i]), io_events=io))
+                           service=float(service[i]), io_events=io,
+                           func_id=int(func_ids[i])))
     return out
 
 

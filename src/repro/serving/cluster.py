@@ -26,7 +26,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.dispatch import (DispatchPolicy, HashDispatch, PullDispatch,
-                                 ServerView, make_dispatch)
+                                 ServerView, make_dispatch, route_hinted)
+from repro.core.predict import make_predictor
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 
@@ -60,6 +61,12 @@ class EngineView(ServerView):
 @dataclasses.dataclass
 class ClusterConfig:
     policy: str = "hash"        # hash | least-outstanding | pull | sfs-aware
+    # duration predictor feeding dispatch its ETA hints
+    # (repro.core.predict): "oracle" passes the front-end ``eta_hint``
+    # through unchanged (legacy behaviour), "none" routes blind,
+    # "history" / "class" learn online from finished requests.  Also
+    # accepts an EtaPredictor instance or a "name:key=val,..." spec.
+    predictor: object = "oracle"
     # sfs-aware knobs (cluster-level O x S rule, units = engine ticks)
     overload_factor: float = 3.0
     adaptive_window: int = 100
@@ -81,18 +88,42 @@ class Cluster:
                       slice_init=self.cfg.slice_init)
         self.policy: DispatchPolicy = make_dispatch(self.cfg.policy, views,
                                                     **kw)
+        self.predictor = make_predictor(self.cfg.predictor)
+        for e in self.engines:
+            e.on_finish = self._observe_finish
+        self.eta_log: dict[int, Optional[int]] = {}
         self.central_queue: deque[Request] = deque()
         self.t = 0
         # (t, central_qlen after pulls, tuple of per-engine active counts)
         self.tick_log: list[tuple[int, int, tuple]] = []
 
     # ------------------------------------------------------------------
+    def _observe_finish(self, req: Request, t: int):
+        """Feedback loop: predictors only ever see finished requests."""
+        self.predictor.observe(req.func_id, req.service_demand)
+
     def route(self, req: Request) -> Optional[int]:
-        """Engine index for ``req`` (None = held in the central queue)."""
-        return self.policy.route(req.rid, req.eta_hint, self.t)
+        """Engine index for ``req`` (None = held in the central queue).
+
+        The ETA hint flows through the shared
+        :func:`repro.core.dispatch.route_hinted` entry point: the
+        ``oracle`` predictor passes the front-end ``req.eta_hint``
+        through unchanged (legacy behaviour); learned predictors see
+        only ``req.func_id``.
+        """
+        idx, eta = route_hinted(self.policy, self.predictor, req.rid,
+                                req.func_id, req.eta_hint, self.t)
+        self.eta_log[req.rid] = eta
+        return idx
 
     def _deliver(self, idx: int, req: Request):
         self.policy.record(idx)
+        eta = self.eta_log.get(req.rid)
+        if req.eta_hint is None and eta is not None:
+            # propagate the learned estimate so a per-engine scheduler
+            # running in hinted_demotion mode can use it; an explicit
+            # front-end hint is never overwritten
+            req.eta_hint = eta
         self.engines[idx].submit(req, getattr(req, "_prompt", None))
 
     def tick(self, arrivals: Sequence[Request] = ()):
@@ -157,6 +188,7 @@ class Cluster:
     def summary(self) -> dict:
         return {
             "policy": self.policy.name,
+            "predictor": self.predictor.name,
             "engines": len(self.engines),
             "dispatch_counts": self.dispatch_counts,
             "overload_bypasses": getattr(self.policy, "overload_bypasses",

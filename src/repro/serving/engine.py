@@ -54,6 +54,9 @@ class Engine:
         self.next_token: dict[int, int] = {}     # rid -> pending input token
         self.lane_busy_ticks = 0
         self.tick_log: list[tuple[int, int, int]] = []  # (t, n_active, qlen)
+        # completion callback (req, finish_tick): the cluster layer feeds
+        # its duration predictor here — only ever finished requests
+        self.on_finish = None
 
         if model_cfg is not None:
             assert params is not None
@@ -184,6 +187,8 @@ class Engine:
                 del self.by_slot[r.slot]
                 r.slot = None
                 self.next_token.pop(r.rid, None)
+                if self.on_finish is not None:
+                    self.on_finish(r, t + 1)
             elif (r.stall_idx < len(r.stall_events)
                   and r.tokens_done >= r.stall_events[r.stall_idx][0]
                   and r.prefill_done):

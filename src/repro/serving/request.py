@@ -21,8 +21,12 @@ class Request:
     stall_events: tuple = ()         # ((tokens_done, stall_ticks), ...)
     eta_hint: Optional[int] = None   # front-end demand estimate (ticks),
                                      # e.g. a max-tokens cap; None=unknown.
-                                     # Used only by cluster dispatch, never
-                                     # by the per-engine schedulers.
+                                     # Used by cluster dispatch and, when a
+                                     # scheduler opts into hinted_demotion,
+                                     # by the per-engine SFS scheduler.
+    func_id: int = 0                 # which app/function this invokes —
+                                     # the key duration predictors learn on
+                                     # (repro.core.predict)
 
     # --- engine bookkeeping -------------------------------------------------
     slot: Optional[int] = None

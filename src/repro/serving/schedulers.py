@@ -232,7 +232,7 @@ class SFSScheduler(Scheduler):
     def __init__(self, lanes: int, *, slice_ticks: Optional[int] = None,
                  adaptive_window: int = 100, slice_init: int = 32,
                  overload_factor: Optional[float] = 3.0,
-                 stall_aware: bool = True):
+                 stall_aware: bool = True, hinted_demotion: bool = False):
         super().__init__(lanes)
         self.queue: deque[int] = deque()        # global FILTER queue
         self.filter_running: list[int] = []
@@ -243,6 +243,7 @@ class SFSScheduler(Scheduler):
         self.window = adaptive_window
         self.overload_factor = overload_factor
         self.stall_aware = stall_aware
+        self.hinted_demotion = hinted_demotion
         self._iats: deque[int] = deque(maxlen=adaptive_window)
         self._last_arrival: Optional[int] = None
         self._since_update = 0
@@ -267,6 +268,13 @@ class SFSScheduler(Scheduler):
     def on_arrival(self, req: Request, t: int):
         self.reqs[req.rid] = req
         self._observe(t)
+        if (self.hinted_demotion and req.eta_hint is not None
+                and req.eta_hint > self.S):
+            # predicted-long: skip FILTER straight to the fair-share
+            # pool — saves the wasted slice S and the demotion switch
+            req.demoted = True
+            self.cfs.on_arrival(req, t)
+            return
         req.queue_enter = t
         self.queue.append(req.rid)
 

@@ -186,3 +186,82 @@ def test_des_pull_prefers_idle_servers():
         server=SimConfig(cores=1, policy="sfs")))
     for s in res.merged.stats:
         assert s.turnaround == pytest.approx(0.05 + 100e-6, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch latency (router -> server network delay)
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_latency_adds_to_turnaround_exactly():
+    """An uncontended request pays service + switch-in + latency, and
+    turnaround is still measured from the *cluster* arrival."""
+    from repro.core.workload import Request as CoreRequest
+    lat = 0.01
+    reqs = [CoreRequest(rid=0, arrival=0.0, service=0.05),
+            CoreRequest(rid=1, arrival=1.0, service=0.05)]
+    res = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=2, dispatch="least-outstanding", dispatch_latency_s=lat,
+        server=SimConfig(cores=1, policy="sfs")))
+    for s in res.merged.stats:
+        assert s.turnaround == pytest.approx(0.05 + 100e-6 + lat, abs=1e-9)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_des_cluster_completes_under_latency(policy):
+    n = 600
+    reqs = generate(FaaSBenchConfig(n_requests=n, cores=8, load=1.0,
+                                    seed=6))
+    res = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=2, dispatch=policy, dispatch_latency_s=0.002,
+        server=SimConfig(cores=4, policy="sfs")))
+    assert [s.rid for s in res.merged.stats] == list(range(n))
+    assert all(s.turnaround >= 0.002 for s in res.merged.stats)
+
+
+def test_overload_bypass_fires_under_dispatch_latency():
+    """O x S re-validation (ROADMAP): with nonzero latency the router's
+    view of each server is stale, but its own in-flight sends spill into
+    the estimated FILTER queue, so a same-instant burst still trips the
+    est-wait >= O x S bypass."""
+    from repro.core.workload import Request as CoreRequest
+    reqs = [CoreRequest(rid=i, arrival=0.0, service=0.05, func_id=0)
+            for i in range(300)]
+    res = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=2, dispatch="sfs-aware", dispatch_latency_s=0.005,
+        slice_init_s=0.05,
+        server=SimConfig(cores=2, policy="sfs")))
+    assert res.overload_bypasses > 0
+    assert [s.rid for s in res.merged.stats] == list(range(300))
+
+
+# ---------------------------------------------------------------------------
+# Multi-server slice-timeline merge (was silently dropped)
+# ---------------------------------------------------------------------------
+
+
+def test_merged_slice_timeline_tagged_per_server():
+    reqs = generate(FaaSBenchConfig(n_requests=800, cores=8, load=1.0,
+                                    seed=3))
+    res = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=2, dispatch="least-outstanding",
+        server=SimConfig(cores=4, policy="sfs")))
+    tl = res.merged.slice_timeline
+    assert tl, "multi-server merge must not drop slice timelines"
+    assert all(len(e) == 3 for e in tl)          # (time, S, server)
+    assert [e[0] for e in tl] == sorted(e[0] for e in tl)
+    assert {e[2] for e in tl} <= {0, 1}
+    # each server's own trace is recoverable from the merged one
+    for i, r in enumerate(res.per_server):
+        assert [(t, s) for (t, s, j) in tl if j == i] == r.slice_timeline
+
+
+def test_merged_slice_timeline_single_server_keeps_legacy_shape():
+    reqs = generate(FaaSBenchConfig(n_requests=400, cores=4, load=1.0,
+                                    seed=4))
+    single = simulate(reqs, SimConfig(cores=4, policy="sfs"))
+    clus = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=1, dispatch="hash",
+        server=SimConfig(cores=4, policy="sfs")))
+    assert clus.merged.slice_timeline == single.slice_timeline
+    assert all(len(e) == 2 for e in clus.merged.slice_timeline)

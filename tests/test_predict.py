@@ -1,0 +1,334 @@
+"""Duration-predictor subsystem: interface/factory contracts, cold-start
+and convergence properties, short/long classification, the no-leakage
+guarantee (observe only ever sees finished requests), and the hint flow
+through both cluster execution models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterSimConfig, FaaSBenchConfig, SimConfig,
+                        generate, simulate_cluster)
+from repro.core.dispatch import make_dispatch, route_hinted
+from repro.core.predict import (PREDICTORS, ClassEta, EtaPredictor,
+                                HistoryEta, NoneEta, OracleEta,
+                                make_predictor, prediction_metrics)
+from repro.core.simulator import ClusterSimulator
+from repro.core.workload import Request as CoreRequest
+from repro.serving import Cluster, ClusterConfig, Engine, EngineConfig, \
+    Request
+from repro.serving.schedulers import SFSScheduler
+
+
+# ---------------------------------------------------------------------------
+# Factory / interface contracts
+# ---------------------------------------------------------------------------
+
+
+def test_factory_names_and_specs():
+    for name in PREDICTORS:
+        p = make_predictor(name)
+        assert isinstance(p, EtaPredictor) and p.name == name
+    p = make_predictor("history:alpha=0.25,mode=median,min_obs=2")
+    assert isinstance(p, HistoryEta)
+    assert p.alpha == 0.25 and p.mode == "median" and p.min_obs == 2
+    p = make_predictor("class:safety_margin=3")
+    assert isinstance(p, ClassEta) and p.safety_margin == 3.0
+    inst = HistoryEta()
+    assert make_predictor(inst) is inst          # instances pass through
+    with pytest.raises(ValueError):
+        make_predictor("nope")
+    with pytest.raises(ValueError):
+        HistoryEta(mode="mode7")
+
+
+def test_oracle_consumes_truth_none_is_blind():
+    oracle, blind = OracleEta(), NoneEta()
+    assert oracle.estimate(3, 1.5) == 1.5
+    assert oracle.predict(3) is None             # no learned state
+    assert blind.estimate(3, 1.5) is None        # ignores ground truth
+    assert blind.predict(3) is None
+
+
+# ---------------------------------------------------------------------------
+# History predictor properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=st.lists(st.floats(1e-3, 10.0), min_size=1, max_size=60))
+def test_cold_start_falls_back_to_global_quantile(vals):
+    p = HistoryEta()                     # cold_quantile = median
+    assert p.predict(0) is None          # nothing observed at all
+    for i, v in enumerate(vals):
+        p.observe(i, v)                  # each function seen once
+    unseen = 10 ** 9
+    expected = float(np.percentile(np.asarray(vals, dtype=float), 50))
+    assert p.predict(unseen) == pytest.approx(expected)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mean=st.floats(0.01, 5.0), seed=st.integers(0, 1000),
+       n=st.integers(2, 200))
+def test_history_running_mean_matches_sample_mean(mean, seed, n):
+    """alpha=None is an exact running mean: the estimate for a
+    stationary function equals the mean of its observations."""
+    rng = np.random.default_rng(seed)
+    vals = np.maximum(rng.normal(mean, 0.2 * mean, size=n), 1e-6)
+    p = HistoryEta(alpha=None)
+    for v in vals:
+        p.observe("f", v)
+    assert p.predict("f") == pytest.approx(float(vals.mean()), rel=1e-9)
+
+
+def test_history_converges_to_stationary_mean():
+    """LLN through the predictor: error vs the true mean shrinks with
+    observation count (fixed seed, deterministic)."""
+    rng = np.random.default_rng(42)
+    mean = 0.8
+    p = HistoryEta(alpha=None)
+    errs = {}
+    for k in range(1, 4001):
+        p.observe("f", float(np.maximum(rng.normal(mean, 0.3), 1e-6)))
+        if k in (10, 4000):
+            errs[k] = abs(p.predict("f") - mean)
+    assert errs[4000] < errs[10]
+    assert errs[4000] < 0.02
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.floats(0.01, 5.0), n=st.integers(1, 50),
+       warm=st.lists(st.floats(1e-3, 10.0), min_size=1, max_size=20))
+def test_error_monotone_nonincreasing_in_observations(d, n, warm):
+    """For a constant-duration function the absolute prediction error is
+    monotone non-increasing in the number of observations — including
+    the step off the cold-start (global-quantile) fallback."""
+    p = HistoryEta()
+    for i, v in enumerate(warm):         # unrelated functions (prior)
+        p.observe(-i - 1, v)
+    errs = [abs(p.predict("f") - d)]     # cold-start error
+    for _ in range(n):
+        p.observe("f", d)
+        errs.append(abs(p.predict("f") - d))
+    assert all(a >= b - 1e-12 for a, b in zip(errs, errs[1:]))
+    assert errs[-1] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_global_quantile_incremental_matches_full_sort():
+    """The sorted quantile window is maintained incrementally across
+    deque evictions; it must always equal a from-scratch percentile of
+    the current window contents."""
+    rng = np.random.default_rng(0)
+    p = HistoryEta(global_window=32)
+    for i, v in enumerate(rng.uniform(0.001, 5.0, size=200)):
+        p.observe(i % 7, float(v))
+        if i % 10 == 0:
+            p.global_quantile()          # materialize the cache mid-stream
+        want = float(np.percentile(np.array(p._global), 50))
+        assert p.global_quantile(0.5) == pytest.approx(want)
+
+
+def test_class_predictor_rejects_median_mode():
+    with pytest.raises(ValueError):
+        make_predictor("class:mode=median")
+
+
+def test_history_median_mode():
+    p = HistoryEta(mode="median")
+    for v in (1.0, 1.0, 1.0, 100.0):     # outlier-robust
+        p.observe("f", v)
+    assert p.predict("f") == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Class predictor (short/long with safety margin)
+# ---------------------------------------------------------------------------
+
+
+def test_class_predictor_separates_and_margins():
+    p = ClassEta(safety_margin=2.0)
+    assert p.predict("anything") is None         # cold: optimistic-short
+    for _ in range(50):
+        p.observe("short", 0.01)
+        p.observe("long", 1.0)
+    assert p.predict("unseen") is None           # unknown stays optimistic
+    boundary = p.global_quantile(p.boundary_quantile)
+    assert p.predict("short") <= boundary <= p.predict("long")
+    # safety margin: a function whose mean is below the boundary but
+    # within margin of it is still classified long
+    for _ in range(10):
+        p.observe("edge", 0.3)
+    boundary = p.global_quantile(p.boundary_quantile)
+    assert 0.3 * p.safety_margin > boundary
+    assert p.predict("edge") > boundary
+
+
+def test_prediction_metrics():
+    pairs = [(1.0, 1.0), (2.0, 1.0), (None, 4.0), (0.5, 4.0)]
+    m = prediction_metrics(pairs, boundary=2.0)
+    assert m["n"] == 4 and m["coverage"] == pytest.approx(0.75)
+    assert m["mape"] == pytest.approx((0.0 + 1.0 + 3.5 / 4.0) / 3)
+    # misclassified: (None, 4.0) -> short-by-default but long;
+    # (0.5, 4.0) -> predicted short, actually long
+    assert m["misclass_vs_S"] == pytest.approx(2 / 4)
+
+
+# ---------------------------------------------------------------------------
+# No-leakage: observe() only ever sees finished requests
+# ---------------------------------------------------------------------------
+
+
+def test_observe_only_called_with_finished_requests():
+    holder = {}
+
+    class Spy(HistoryEta):
+        def observe(self, func_id, true_service):
+            sim = holder["sim"]
+            assert any(
+                j.finish is not None
+                and j.req.func_id == func_id
+                and j.req.service == true_service
+                for srv in sim.servers for j in srv.jobs.values()
+            ), "observe() called with a request that has not finished"
+            super().observe(func_id, true_service)
+
+    spy = Spy()
+    reqs = generate(FaaSBenchConfig(n_requests=400, cores=8, load=1.0,
+                                    seed=3, n_functions=24))
+    sim = ClusterSimulator(reqs, ClusterSimConfig(
+        n_servers=2, dispatch="sfs-aware", predictor=spy,
+        server=SimConfig(cores=4, policy="sfs")))
+    holder["sim"] = sim
+    res = sim.run()
+    assert spy.n_observed == 400                 # every completion fed back
+    assert res.predictor == "history"
+    assert len(res.eta_log) == 400
+
+
+# ---------------------------------------------------------------------------
+# Hint flow through both cluster execution models (shared plumbing)
+# ---------------------------------------------------------------------------
+
+
+def test_route_hinted_is_the_shared_entry_point():
+    from repro.core.dispatch import ServerView
+
+    class V(ServerView):
+        def outstanding(self):
+            return 0
+
+    policy = make_dispatch("least-outstanding", [V()])
+    idx, eta = route_hinted(policy, OracleEta(), 0, 7, 1.25, 0.0)
+    assert idx == 0 and eta == 1.25
+    idx, eta = route_hinted(policy, NoneEta(), 1, 7, 1.25, 0.0)
+    assert idx == 0 and eta is None
+
+
+def test_des_cluster_predictor_specs_complete():
+    reqs = generate(FaaSBenchConfig(n_requests=500, cores=8, load=0.9,
+                                    seed=5, n_functions=12))
+    for spec in PREDICTORS:
+        res = simulate_cluster(reqs, ClusterSimConfig(
+            n_servers=2, dispatch="sfs-aware", predictor=spec,
+            server=SimConfig(cores=4, policy="sfs")))
+        assert [s.rid for s in res.merged.stats] == list(range(500))
+        assert res.predictor == spec
+        if spec == "oracle":
+            assert all(res.eta_log[r.rid] == r.service for r in reqs)
+        if spec == "none":
+            assert all(e is None for e in res.eta_log.values())
+
+
+def tick_workload(n=200, lanes=8, load=1.0, seed=2, n_funcs=10):
+    """Per-function bimodal stream: function identity determines the
+    (stable) token demand, so history predictors can learn it."""
+    rng = np.random.default_rng(seed)
+    func_tokens = np.where(np.arange(n_funcs) % 5 < 4,
+                           rng.integers(2, 8, n_funcs),
+                           rng.integers(30, 80, n_funcs))
+    fid = rng.integers(0, n_funcs, n)
+    svc = func_tokens[fid]
+    span = svc.sum() / (load * lanes)
+    iats = rng.exponential(1.0, n)
+    arr = np.cumsum(iats * span / iats.sum()).astype(int)
+    return [Request(rid=i, arrival=int(arr[i]), prompt_len=4,
+                    n_tokens=int(svc[i]), func_id=int(fid[i]))
+            for i in range(n)]
+
+
+def test_tick_cluster_consumes_same_predictor_objects():
+    pred = HistoryEta()
+    engines = [Engine(EngineConfig(lanes=4, n_slots=64, policy="sfs"))
+               for _ in range(2)]
+    cluster = Cluster(engines, ClusterConfig(policy="sfs-aware",
+                                             predictor=pred))
+    assert cluster.predictor is pred             # same object, no copy
+    done = cluster.run(tick_workload(), max_ticks=2_000_000)
+    assert len(done) == 200
+    assert pred.n_observed == 200                # fed by engine completions
+    # learned hints were logged for routing
+    assert len(cluster.eta_log) == 200
+    assert any(e is not None for e in cluster.eta_log.values())
+
+
+def test_tick_cluster_oracle_matches_legacy_eta_hint_flow():
+    """predictor="oracle" must reproduce the pre-predictor Cluster
+    exactly: the front-end eta_hint flows through unchanged."""
+    rng = np.random.default_rng(11)
+    svc = np.where(rng.random(120) < 0.8, rng.integers(2, 8, 120),
+                   rng.integers(30, 80, 120))
+    arr = np.cumsum(rng.exponential(2.0, 120)).astype(int)
+
+    def stream():
+        return [Request(rid=i, arrival=int(arr[i]), prompt_len=4,
+                        n_tokens=int(svc[i]), eta_hint=int(svc[i]) + 1)
+                for i in range(120)]
+
+    def run(cfg):
+        engines = [Engine(EngineConfig(lanes=2, n_slots=64, policy="sfs"))
+                   for _ in range(3)]
+        done = Cluster(engines, cfg).run(stream(), max_ticks=2_000_000)
+        return [(r.rid, r.finish, r.n_ctx, r.demoted) for r in done]
+
+    a = run(ClusterConfig(policy="sfs-aware"))              # default oracle
+    b = run(ClusterConfig(policy="sfs-aware", predictor="oracle"))
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# Hinted demotion: predicted-long skips FILTER straight to CFS
+# ---------------------------------------------------------------------------
+
+
+def test_des_hinted_demotion_saves_the_wasted_slice():
+    reqs = [CoreRequest(rid=0, arrival=0.0, service=1.0, func_id=0),
+            CoreRequest(rid=1, arrival=0.01, service=0.01, func_id=1)]
+
+    def run(demote):
+        res = simulate_cluster(reqs, ClusterSimConfig(
+            n_servers=1, dispatch="least-outstanding", predictor="oracle",
+            server=SimConfig(cores=1, policy="sfs", slice_s=0.05,
+                             hinted_demotion=demote)))
+        return {s.rid: s for s in res.merged.stats}
+
+    base, dem = run(False), run(True)
+    assert dem[0].demoted                        # long went straight to CFS
+    # the short no longer waits out the long's FILTER slice S
+    assert dem[1].turnaround < base[1].turnaround
+    assert base[1].turnaround >= 0.05            # burned the full slice
+
+
+def test_serving_hinted_demotion_routes_long_to_cfs_pool():
+    s = SFSScheduler(lanes=2, slice_ticks=5, hinted_demotion=True)
+    long_req = Request(rid=0, arrival=0, prompt_len=4, n_tokens=50,
+                       eta_hint=51)
+    short_req = Request(rid=1, arrival=0, prompt_len=4, n_tokens=2,
+                        eta_hint=3)
+    s.on_arrival(long_req, 0)
+    s.on_arrival(short_req, 0)
+    assert long_req.demoted and 0 in s.cfs.runnable
+    assert list(s.queue) == [1]                  # short stays on FILTER path
+    # without hints nothing changes
+    s2 = SFSScheduler(lanes=2, slice_ticks=5, hinted_demotion=True)
+    blind = Request(rid=2, arrival=0, prompt_len=4, n_tokens=50)
+    s2.on_arrival(blind, 0)
+    assert not blind.demoted and list(s2.queue) == [2]

@@ -3,8 +3,8 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.workload import (AZURE_TABLE_I, FaaSBenchConfig, generate,
-                                 offered_load)
+from repro.core.workload import (AZURE_TABLE_I, FaaSBenchConfig,
+                                 function_table, generate, offered_load)
 
 
 def test_deterministic():
@@ -37,6 +37,45 @@ def test_arrivals_sorted_and_positive():
     arr = [r.arrival for r in reqs]
     assert arr == sorted(arr)
     assert all(r.service > 0 for r in reqs)
+
+
+def test_per_function_model_preserves_table_i():
+    """The per-function partition must not change the aggregate duration
+    law: bucket masses stay Table-I's (same bucket sampling), and
+    equal-log-width sub-ranges compose back to log-uniform."""
+    reqs = generate(FaaSBenchConfig(n_requests=30_000, seed=0,
+                                    n_functions=60))
+    d = np.array([r.service for r in reqs])
+    for p, lo, hi in AZURE_TABLE_I:
+        got = ((d >= lo / 1e3) & (d < hi / 1e3)).mean()
+        assert abs(got - p) < 0.02, (lo, hi, got, p)
+
+
+def test_per_function_durations_stay_in_their_subrange():
+    nf = 24
+    lo_f, hi_f, bucket_f, offset = function_table(nf)
+    reqs = generate(FaaSBenchConfig(n_requests=5000, seed=1,
+                                    n_functions=nf))
+    assert {r.func_id for r in reqs} <= set(range(nf))
+    for r in reqs:
+        assert lo_f[r.func_id] / 1e3 <= r.service <= hi_f[r.func_id] / 1e3
+    # sub-ranges partition each bucket: contiguous, within bucket bounds
+    for b, (_, lo, hi) in enumerate(AZURE_TABLE_I):
+        fs = np.where(bucket_f == b)[0]
+        assert lo_f[fs[0]] == pytest.approx(lo)
+        assert hi_f[fs[-1]] == pytest.approx(hi)
+        for a, c in zip(fs, fs[1:]):
+            assert hi_f[a] == pytest.approx(lo_f[c])
+
+
+def test_per_function_model_validation_and_determinism():
+    with pytest.raises(ValueError):
+        function_table(3)                # fewer functions than buckets
+    a = generate(FaaSBenchConfig(n_requests=300, seed=3, n_functions=12))
+    b = generate(FaaSBenchConfig(n_requests=300, seed=3, n_functions=12))
+    assert a == b
+    legacy = generate(FaaSBenchConfig(n_requests=300, seed=3))
+    assert all(r.func_id == 0 for r in legacy)
 
 
 def test_io_events():
