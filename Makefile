@@ -8,10 +8,11 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 test:
 	$(PY) -m pytest -x -q
 
-# jax-light subset: scheduler/simulator/cluster/workload logic only
+# jax-light subset: scheduler/simulator/cluster/spec/workload logic only
 test-fast:
 	$(PY) -m pytest -q tests/test_simulator.py tests/test_workload.py \
-	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py
+	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py \
+	  tests/test_predict.py tests/test_spec.py
 
 # <60 s cluster-dispatch smoke check (asserts the short-P99 headline)
 bench-smoke:

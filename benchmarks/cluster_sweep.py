@@ -1,17 +1,26 @@
-"""Cluster dispatch sweep: policy x engine-count x load.
+"""Cluster dispatch sweep: policy x engine-count x load (+ mixed pools).
 
 Sweeps the four dispatch policies (hash, least-outstanding, pull,
-sfs-aware) over both execution models of the cluster layer:
+sfs-aware) over both execution models of the cluster layer, every cell
+declared as a :class:`repro.ExperimentSpec` and run through the single
+``repro.run_experiment`` entry point:
 
-* the tick-engine serving cluster (``repro.serving.cluster``, synthetic
-  mode — no JAX), reporting P50/P99 turnaround and mean RTE per
-  service-demand bucket (short / medium / long, in ticks);
-* optionally (``--des``) the discrete-event multi-server simulator over
-  a FaaSBench workload (seconds), for cross-validation.
+* the tick-engine serving cluster (``engine="tick"``, synthetic mode —
+  no JAX), reporting P50/P99 turnaround and mean RTE per service-demand
+  bucket (short / medium / long, in ticks);
+* the discrete-event multi-server simulator (``engine="des"``, FaaSBench
+  workload, seconds) — in ``--smoke``/``--des`` runs, for
+  cross-validation.
+
+A **mixed-pool** scenario exercises heterogeneous clusters (first-class
+in the spec layer): two FILTER-rich SFS servers (6 lanes) next to two
+small fair-share-only CFS servers (2 lanes).  ``sfs-aware`` exploits the
+shape — shorts to the FILTER-rich servers, longs concentrated on the
+fair-share pool — where shape-blind ``hash`` cannot.
 
 ``--smoke`` runs a <60 s configuration suitable as a CI check and
-verifies the headline cluster claim: sfs-aware short-function P99 <=
-hash at load >= 0.8.
+verifies the headline cluster claims: sfs-aware short-function P99 <=
+hash at load >= 0.8, in the uniform sweep AND the mixed pool.
 
 Usage:
   PYTHONPATH=src python benchmarks/cluster_sweep.py [--smoke] [--des]
@@ -21,7 +30,6 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import time
 
 import numpy as np
 
@@ -30,81 +38,69 @@ if __package__ in (None, ""):          # `python benchmarks/cluster_sweep.py`
         os.path.abspath(__file__))))
 
 from benchmarks.common import save
-from repro.core import ClusterSimConfig, FaaSBenchConfig, SimConfig, generate
+from repro.core import FaaSBenchConfig
 from repro.core.dispatch import POLICIES
-from repro.core.metrics import bucket_stats
-from repro.core.simulator import simulate_cluster
-from repro.serving import Cluster, ClusterConfig, Engine, EngineConfig, Request
+from repro.core.metrics import DEFAULT_BUCKET_EDGES_T, bucket_stats
+from repro.core.spec import (ExperimentSpec, ServerSpec, TickWorkloadSpec,
+                             run_experiment)
 
-# tick-engine duration buckets (ticks = decode tokens): short < 10 <=
-# medium < 40 <= long, chosen to straddle the bimodal synthetic workload
-TICK_EDGES = (10, 40)
-SHORT_LABEL = "<10t"
+SHORT_LABEL = f"<{DEFAULT_BUCKET_EDGES_T[0]:g}t"
+SHORT_LABEL_S = "<0.1s"
 
 
-def tick_workload(n: int, total_lanes: int, load: float, seed: int,
-                  short_frac: float = 0.8) -> list:
-    """Bimodal open-loop workload (mirrors tests/test_serving.workload),
-    with eta hints — the front-end knows each request's max-tokens cap."""
-    rng = np.random.default_rng(seed)
-    svc = np.where(rng.random(n) < short_frac,
-                   rng.integers(2, 8, n), rng.integers(30, 80, n))
-    span = svc.sum() / (load * total_lanes)
-    iats = rng.exponential(1.0, n)
-    arr = np.cumsum(iats * span / iats.sum()).astype(int)
-    return [Request(rid=i, arrival=int(arr[i]), prompt_len=4,
-                    n_tokens=int(svc[i]), eta_hint=int(svc[i]) + 1)
-            for i in range(n)]
+def uniform_servers(n: int, lanes: int) -> tuple:
+    return tuple(ServerSpec(cores=lanes) for _ in range(n))
 
 
-def run_tick(policy: str, n_engines: int, load: float, *, n: int,
-             lanes: int, seed: int) -> dict:
-    engines = [Engine(EngineConfig(lanes=lanes, n_slots=16 * lanes,
-                                   policy="sfs"))
-               for _ in range(n_engines)]
-    cluster = Cluster(engines, ClusterConfig(policy=policy))
-    t0 = time.time()
-    done = cluster.run(tick_workload(n, n_engines * lanes, load, seed),
-                       max_ticks=20_000_000)
-    wall = time.time() - t0
-    svc = np.array([r.service_demand for r in done], dtype=np.float64)
-    ta = np.array([r.turnaround for r in done], dtype=np.float64)
-    rte = np.array([r.rte for r in done], dtype=np.float64)
+# the heterogeneous pool: FILTER-rich SFS servers + small fair-share-only
+# CFS servers (16 lanes total, like 4x4 uniform); same spec in both
+# engines (the DES ignores tick cache slots)
+MIXED_SERVERS = (ServerSpec(cores=6), ServerSpec(cores=6),
+                 ServerSpec(cores=2, scheduler="cfs"),
+                 ServerSpec(cores=2, scheduler="cfs"))
+
+
+def run_tick(policy: str, servers: tuple, load: float, *, n: int,
+             seed: int, scenario: str = "uniform") -> dict:
+    spec = ExperimentSpec(
+        engine="tick", servers=servers, dispatch=policy,
+        workload=TickWorkloadSpec(n=n, load=load, seed=seed))
+    res = run_experiment(spec, max_ticks=20_000_000)
     return {
-        "layer": "tick-engine", "policy": policy, "engines": n_engines,
-        "lanes": lanes, "load": load, "n": len(done), "wall_s": wall,
-        "dispatch_counts": cluster.dispatch_counts,
-        "overload_bypasses": cluster.summary()["overload_bypasses"],
-        "buckets": bucket_stats(svc, ta, rte, edges=TICK_EDGES, unit="t"),
+        "layer": "tick-engine", "scenario": scenario, "policy": policy,
+        "engines": len(servers), "lanes": [s.cores for s in servers],
+        "load": load, "n": res.n, "wall_s": res.wall_s,
+        "dispatch_counts": res.dispatch_counts,
+        "overload_bypasses": res.overload_bypasses,
+        "buckets": res.buckets(),
     }
 
 
-def run_des(policy: str, n_servers: int, load: float, *, n: int,
-            cores: int, seeds=(7, 11)) -> dict:
+def run_des(policy: str, servers: tuple, load: float, *, n: int,
+            seeds=(7, 11), scenario: str = "uniform") -> dict:
     """DES sweep cell; pools a couple of seeds so p99 is stable."""
-    svc, ta, rte, counts, bypasses = [], [], [], None, 0
-    t0 = time.time()
+    total = sum(s.cores for s in servers)
+    svc, ta, rte, counts, bypasses, wall = [], [], [], None, 0, 0.0
     for seed in seeds:
-        reqs = generate(FaaSBenchConfig(n_requests=n,
-                                        cores=n_servers * cores,
-                                        load=load, seed=seed))
-        res = simulate_cluster(reqs, ClusterSimConfig(
-            n_servers=n_servers, dispatch=policy,
-            server=SimConfig(cores=cores, policy="sfs")))
-        svc += [s.service for s in res.merged.stats]
-        ta += [s.turnaround for s in res.merged.stats]
-        rte += [s.rte for s in res.merged.stats]
+        spec = ExperimentSpec(
+            engine="des", servers=servers, dispatch=policy,
+            workload=FaaSBenchConfig(n_requests=n, cores=total, load=load,
+                                     seed=seed))
+        res = run_experiment(spec)
+        svc.append(res.service)
+        ta.append(res.turnaround)
+        rte.append(res.rte)
         counts = (res.dispatch_counts if counts is None else
                   [a + b for a, b in zip(counts, res.dispatch_counts)])
         bypasses += res.overload_bypasses
-    wall = time.time() - t0
+        wall += res.wall_s
     return {
-        "layer": "des", "policy": policy, "engines": n_servers,
-        "cores": cores, "load": load, "n": len(svc),
-        "wall_s": wall, "dispatch_counts": counts,
-        "overload_bypasses": bypasses,
-        "buckets": bucket_stats(np.array(svc), np.array(ta),
-                                np.array(rte)),
+        "layer": "des", "scenario": scenario, "policy": policy,
+        "engines": len(servers), "cores": [s.cores for s in servers],
+        "load": load, "n": sum(len(x) for x in svc), "wall_s": wall,
+        "dispatch_counts": counts, "overload_bypasses": bypasses,
+        "buckets": bucket_stats(np.concatenate(svc), np.concatenate(ta),
+                                np.concatenate(rte)),
     }
 
 
@@ -120,7 +116,7 @@ def print_row(r: dict, short_key: str):
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI config: <60 s, asserts the headline claim")
+                    help="CI config: <60 s, asserts the headline claims")
     ap.add_argument("--des", action="store_true",
                     help="also sweep the discrete-event multi-server sim")
     ap.add_argument("--n", type=int, default=None, help="requests per run")
@@ -140,7 +136,8 @@ def main(argv=None):
             print(f"tick-engine cluster: engines={m} lanes={lanes} "
                   f"load={load}")
             for pol in POLICIES:
-                r = run_tick(pol, m, load, n=n_tick, lanes=lanes, seed=7)
+                r = run_tick(pol, uniform_servers(m, lanes), load,
+                             n=n_tick, seed=7)
                 rows.append(r)
                 print_row(r, SHORT_LABEL)
     if args.des or args.smoke:
@@ -148,34 +145,55 @@ def main(argv=None):
             for load in loads:
                 print(f"DES cluster: servers={m} cores={lanes} load={load}")
                 for pol in POLICIES:
-                    r = run_des(pol, m, load, n=n_des, cores=lanes)
+                    r = run_des(pol, uniform_servers(m, lanes), load,
+                                n=n_des)
                     rows.append(r)
-                    print_row(r, "<0.1s")
+                    print_row(r, SHORT_LABEL_S)
+
+    # mixed-pool scenario: heterogeneous shapes, declared purely via spec
+    mixed_loads = [0.8, 1.0] if args.smoke else loads
+    for load in mixed_loads:
+        print(f"tick-engine MIXED pool (6+6 sfs / 2+2 cfs): load={load}")
+        for pol in POLICIES:
+            r = run_tick(pol, MIXED_SERVERS, load, n=n_tick,
+                         seed=7, scenario="mixed")
+            rows.append(r)
+            print_row(r, SHORT_LABEL)
+    if args.des or args.smoke:
+        for load in mixed_loads:
+            print(f"DES MIXED pool (6+6 sfs / 2+2 cfs): load={load}")
+            for pol in POLICIES:
+                r = run_des(pol, MIXED_SERVERS, load, n=n_des,
+                            scenario="mixed")
+                rows.append(r)
+                print_row(r, SHORT_LABEL_S)
 
     path = save("cluster_sweep", {"rows": rows})
     print("saved", path)
 
     # headline regression: sfs-aware must not lose to hash on short-
-    # function P99 at load >= 0.8 (small tolerance for tie noise).
+    # function P99 at load >= 0.8 (small tolerance for tie noise) — in
+    # the uniform sweep and in the mixed pool, where exploiting the
+    # FILTER-rich servers is the whole point.
     # Hard-enforced in the smoke config only: the full sweep includes
     # deliberately unstable cells (2 engines at load 1.0) where both
     # policies are in queue-explosion territory and p99 is backlog noise.
     failures = []
-    by_key = {(r["layer"], r["engines"], r["load"], r["policy"]): r
-              for r in rows}
-    for (layer, m, load, pol), r in by_key.items():
+    by_key = {(r["layer"], r["scenario"], r["engines"], r["load"],
+               r["policy"]): r for r in rows}
+    for (layer, scenario, m, load, pol), r in by_key.items():
         if pol != "sfs-aware" or load < 0.8:
             continue
-        h = by_key[(layer, m, load, "hash")]
-        skey = SHORT_LABEL if layer == "tick-engine" else "<0.1s"
+        h = by_key[(layer, scenario, m, load, "hash")]
+        skey = SHORT_LABEL if layer == "tick-engine" else SHORT_LABEL_S
         sfs_p99 = r["buckets"][skey]["p99"]
         hash_p99 = h["buckets"][skey]["p99"]
         ok = sfs_p99 <= hash_p99 * 1.05
-        print(f"[{layer} m={m} load={load}] sfs-aware short p99 "
-              f"{sfs_p99:.2f} vs hash {hash_p99:.2f} -> "
+        print(f"[{layer} {scenario} m={m} load={load}] sfs-aware short "
+              f"p99 {sfs_p99:.2f} vs hash {hash_p99:.2f} -> "
               f"{'OK' if ok else 'FAIL'}")
         if not ok:
-            failures.append((layer, m, load))
+            failures.append((layer, scenario, m, load))
     if failures:
         print("headline check failures:", failures)
         if args.smoke:

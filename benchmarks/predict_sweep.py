@@ -1,4 +1,4 @@
-"""Duration-predictor sweep: predictor x dispatch x load.
+"""Duration-predictor sweep: predictor x dispatch x load (+ class knobs).
 
 How much of the ETA oracle's short-function advantage does a *learned*
 predictor recover?  Sweeps the predictor subsystem
@@ -7,7 +7,14 @@ dispatch over FaaSBench workloads with a per-function app model
 (``n_functions`` functions partitioning Azure Table-I), reporting
 prediction quality (coverage, MAPE, short/long misclassification vs the
 dispatcher's slice S) next to per-duration-bucket P50/P99 turnaround and
-mean RTE.
+mean RTE.  Every cell is declared as a :class:`repro.ExperimentSpec`
+(predictors via ``PredictorSpec`` strings) and run through
+``repro.run_experiment``.
+
+The ``class`` predictor's quantile knobs (``safety_margin``,
+``boundary_quantile``, ``long_quantile`` — ROADMAP: its ~39 %
+misclassification leaves most of the history-vs-class gap on the table)
+are exposed through ``PredictorSpec`` and swept here in the full run.
 
 Prediction value concentrates where the paper's own overload analysis
 lives (Fig. 12): under *bursty* arrivals (``iat="trace"``) with the
@@ -47,6 +54,7 @@ from repro.core import ClusterSimConfig, FaaSBenchConfig, SimConfig, generate
 from repro.core.metrics import bucket_stats
 from repro.core.predict import PREDICTORS, prediction_metrics
 from repro.core.simulator import simulate_cluster
+from repro.core.spec import ExperimentSpec, ServerSpec, run_experiment
 
 SHORT_LABEL = "<0.1s"
 
@@ -92,6 +100,12 @@ def check_oracle_backcompat() -> bool:
 def run_cell(predictor: str, dispatch: str, load: float, *, n: int,
              servers: int, cores: int, n_functions: int, iat: str,
              seeds=(7, 11), hinted_demotion: bool = False) -> dict:
+    """One sweep cell, declared as an ExperimentSpec per seed.
+
+    ``predictor`` is any PredictorSpec string — including knobbed ones
+    like ``"class:margin=1.5,boundary=0.6"``.
+    """
+    sched = ("sfs:hinted_demotion=True" if hinted_demotion else "sfs")
     svc, ta, rte, pairs = [], [], [], []
     bypasses, S_last = 0, None
     t0 = time.time()
@@ -99,14 +113,16 @@ def run_cell(predictor: str, dispatch: str, load: float, *, n: int,
         reqs = generate(FaaSBenchConfig(
             n_requests=n, cores=servers * cores, load=load, seed=seed,
             n_functions=n_functions, iat=iat))
-        res = simulate_cluster(reqs, ClusterSimConfig(
-            n_servers=servers, dispatch=dispatch, predictor=predictor,
-            server=SimConfig(cores=cores, policy="sfs",
-                             hinted_demotion=hinted_demotion)))
+        spec = ExperimentSpec(
+            engine="des",
+            servers=tuple(ServerSpec(cores=cores, scheduler=sched)
+                          for _ in range(servers)),
+            dispatch=dispatch, predictor=predictor)
+        res = run_experiment(spec, requests=reqs)
         pairs += [(res.eta_log.get(r.rid), r.service) for r in reqs]
-        svc += [s.service for s in res.merged.stats]
-        ta += [s.turnaround for s in res.merged.stats]
-        rte += [s.rte for s in res.merged.stats]
+        svc += list(res.service)
+        ta += list(res.turnaround)
+        rte += list(res.rte)
         bypasses += res.overload_bypasses
         S_last = res.dispatch_S if res.dispatch_S is not None else S_last
     return {
@@ -125,7 +141,7 @@ def print_row(r: dict):
     b, p = r["buckets"], r["prediction"]
     short, long_ = b[SHORT_LABEL], b[list(b)[-1]]
     mis = p.get("misclass_vs_S")
-    print(f"  {r['predictor']:8s} short p50={short['p50']:7.3f} "
+    print(f"  {r['predictor']:34s} short p50={short['p50']:7.3f} "
           f"p99={short['p99']:8.3f} rte={short.get('mean_rte', 0):.3f} | "
           f"long p99={long_['p99']:8.2f} | cov={p['coverage']:.2f} "
           f"mape={p['mape']:6.2f} "
@@ -166,6 +182,26 @@ def main(argv=None):
                          hinted_demotion=demote)
             rows.append(r)
             print_row(r)
+
+    # class-predictor quantile-knob sweep (PredictorSpec strings): the
+    # default margin=2, boundary=0.5 misclassifies ~39% of requests vs
+    # the dispatcher's S — how much of that is knob tuning?  The
+    # default-knob baseline is the 'class' row of the load=1.0 cell
+    # above; only knobbed variants run here.
+    if args.smoke:
+        class_grid = ["class:margin=1,boundary=0.75"]
+    else:
+        class_grid = [f"class:margin={m},boundary={b},long=0.9"
+                      for m in (1, 1.5, 2) for b in (0.5, 0.75, 0.9)]
+    print(f"class-predictor knob sweep (sfs-aware, trace, load=1.0, "
+          f"hinted demotion, {len(class_grid)} cells; baseline = the "
+          f"default 'class' row above):")
+    for pred in class_grid:
+        r = run_cell(pred, "sfs-aware", 1.0, n=n, servers=servers,
+                     cores=cores, n_functions=n_funcs, iat="trace",
+                     hinted_demotion=True)
+        rows.append(r)
+        print_row(r)
 
     print("PR 1 back-compat cross-validation:")
     backcompat_ok = check_oracle_backcompat()

@@ -3,7 +3,12 @@ engine e2e + the roofline table (from dry-run artifacts, if present).
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run fig2 fig6  # subset
+  PYTHONPATH=src python -m benchmarks.run --smoke cluster predict
   REPRO_BENCH_N=49712 ... runs at the paper's request count.
+
+Exit status is non-zero when any suite raises or returns a failing
+return code, so CI can catch benchmark regressions.  ``--smoke`` is
+passed through to suites that take CLI args (cluster, predict).
 """
 from __future__ import annotations
 
@@ -30,19 +35,57 @@ SUITES = {
 }
 
 
-def main() -> None:
-    names = [a for a in sys.argv[1:] if not a.startswith("-")] or \
-        list(SUITES)
+# suites whose main(argv) takes CLI flags (--smoke pass-through)
+ARGV_SUITES = {"cluster", "predict"}
+
+
+def _run_suite(name: str, mod, flags: list) -> int:
+    rc = mod.main(flags) if (flags and name in ARGV_SUITES) else mod.main()
+    # some suites return their result dict (fig1) rather than an exit
+    # code; only an int counts as a failing/passing status
+    return rc if isinstance(rc, int) else 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    flags = [a for a in argv if a.startswith("-")]
+    names = [a for a in argv if not a.startswith("-")] or list(SUITES)
+    if "-h" in flags or "--help" in flags:
+        print(__doc__)
+        print("suites:", ", ".join(SUITES))
+        return 0
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        print(f"unknown suite(s): {', '.join(unknown)}; "
+              f"valid: {', '.join(SUITES)}")
+        print("(flags that take a value, e.g. --n 500, are not supported "
+              "here — use REPRO_BENCH_N or run the suite directly)")
+        return 1
+    failures = []
     for name in names:
         mod = SUITES[name]
         print(f"\n===== {name}: {mod.__doc__.splitlines()[0]}")
         t0 = time.time()
+        rc = None
         try:
-            mod.main()
-        except Exception as e:                     # keep the suite running
+            rc = _run_suite(name, mod, flags)
+        except SystemExit as e:      # argparse exits (e.g. --help) must
+            rc = (e.code if isinstance(e.code, int)   # not abort the rest;
+                  else 0 if e.code is None else 1)    # sys.exit("msg") == 1
+        except Exception as e:                     # keep the run going
             print(f"  !! {name} failed: {e!r}")
+            failures.append(name)
+        if rc not in (None, 0):
+            print(f"  !! {name} exited {rc}")
+            failures.append(name)
         print(f"  ({time.time() - t0:.1f}s)")
+    if failures:
+        print(f"\n{len(failures)}/{len(names)} suite(s) failed: "
+              + ", ".join(failures))
+        return 1
+    print(f"\nall {len(names)} suite(s) passed")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

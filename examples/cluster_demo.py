@@ -1,48 +1,44 @@
-"""Cluster scheduling demo: 4 SFS engines behind each dispatch policy.
+"""Cluster scheduling demo: experiment specs, one entry point.
 
-Runs the same bimodal request stream (80% short, 20% long decodes, with
-front-end eta hints) through the four cluster dispatch policies and
-prints per-duration-bucket turnaround percentiles — the three-level
-scheduling story of docs/CLUSTER.md in one screen.  Synthetic engine
+Declares each cluster experiment as a ``repro.ExperimentSpec`` — 4 SFS
+engines behind each dispatch policy, then a *heterogeneous* mixed pool
+(two FILTER-rich 6-lane SFS servers + two small fair-share-only CFS
+servers) that ``sfs-aware`` exploits and shape-blind ``hash`` cannot —
+and runs everything through ``repro.run_experiment``.  Synthetic engine
 mode (no JAX): identical scheduling behaviour, no model weights.
 
   PYTHONPATH=src python examples/cluster_demo.py
 """
-import numpy as np
-
+import repro
 from repro.core.dispatch import POLICIES
-from repro.core.metrics import bucket_stats
-from repro.serving import Cluster, ClusterConfig, Engine, EngineConfig, \
-    Request
 
 print(__doc__)
 
-N, ENGINES, LANES, LOAD = 800, 4, 4, 0.9
-rng = np.random.default_rng(7)
-svc = np.where(rng.random(N) < 0.8, rng.integers(2, 8, N),
-               rng.integers(30, 80, N))
-span = svc.sum() / (LOAD * ENGINES * LANES)
-iats = rng.exponential(1.0, N)
-arr = np.cumsum(iats * span / iats.sum()).astype(int)
+WORKLOAD = repro.TickWorkloadSpec(n=800, load=0.9, seed=7)
 
 
-def stream():
-    return [Request(rid=i, arrival=int(arr[i]), prompt_len=4,
-                    n_tokens=int(svc[i]), eta_hint=int(svc[i]) + 1)
-            for i in range(N)]
-
-
-for policy in POLICIES:
-    engines = [Engine(EngineConfig(lanes=LANES, n_slots=64, policy="sfs"))
-               for _ in range(ENGINES)]
-    cluster = Cluster(engines, ClusterConfig(policy=policy))
-    done = cluster.run(stream(), max_ticks=10_000_000)
-    b = bucket_stats(np.array([r.service_demand for r in done]),
-                     np.array([r.turnaround for r in done]),
-                     np.array([r.rte for r in done]),
-                     edges=(10, 40), unit="t")
-    print(f"\n{policy}  (dispatch {cluster.dispatch_counts}, "
-          f"{cluster.summary()['overload_bypasses']} overload bypasses)")
-    for label, row in b.items():
+def show(res: repro.ExperimentResult):
+    print(f"\n{res.policy}  (dispatch {res.dispatch_counts}, "
+          f"{res.overload_bypasses} overload bypasses)")
+    for label, row in res.buckets().items():
         print(f"  {label:8s} n={row['n']:4d}  p50={row['p50']:6.1f}  "
               f"p99={row['p99']:7.1f}  mean RTE={row['mean_rte']:.3f}")
+
+
+print("== uniform pool: 4 engines x 4 lanes ==")
+for policy in POLICIES:
+    show(repro.run_experiment(repro.ExperimentSpec(
+        engine="tick",
+        servers=tuple(repro.ServerSpec(cores=4) for _ in range(4)),
+        dispatch=policy, workload=WORKLOAD)))
+
+print("\n== mixed pool: 6+6 sfs / 2+2 cfs (heterogeneous, same total "
+      "lanes) ==")
+MIXED = (repro.ServerSpec(cores=6),
+         repro.ServerSpec(cores=6),
+         repro.ServerSpec(cores=2, scheduler="cfs"),
+         repro.ServerSpec(cores=2, scheduler="cfs"))
+for policy in ("hash", "sfs-aware"):
+    show(repro.run_experiment(repro.ExperimentSpec(
+        engine="tick", servers=MIXED, dispatch=policy,
+        workload=WORKLOAD)))

@@ -1,0 +1,30 @@
+"""repro — SFS (Smart OS Scheduling for Serverless Functions) reproduction.
+
+The top-level public API is the experiment-spec layer
+(:mod:`repro.core.spec`): declare an experiment once — workload, engine
+(``des`` | ``tick``), per-server shapes, dispatch, predictor — and run it
+through :func:`run_experiment`, which returns one unified
+:class:`ExperimentResult` schema whichever engine executed it.
+
+    import repro
+    spec = repro.ExperimentSpec(
+        engine="des",
+        servers=(repro.ServerSpec(cores=6),
+                 repro.ServerSpec(cores=2, scheduler="cfs")),
+        dispatch="sfs-aware:O=3,N=100",
+        predictor="history:warmup=2",
+        workload=FaaSBenchConfig(n_requests=2000, cores=8, load=0.9),
+    )
+    result = repro.run_experiment(spec)
+    result.buckets()            # short/medium/long P50/P99 + mean RTE
+
+Everything here is jax-free at import time; the tick engine only loads
+when a tick experiment actually runs.  See docs/API.md.
+"""
+from repro.core.spec import (DispatchSpec, ExperimentResult, ExperimentSpec,
+                             PredictorSpec, SchedulerSpec, ServerSpec,
+                             TickWorkloadSpec, run_experiment)
+
+__all__ = ["DispatchSpec", "ExperimentResult", "ExperimentSpec",
+           "PredictorSpec", "SchedulerSpec", "ServerSpec",
+           "TickWorkloadSpec", "run_experiment"]

@@ -1,6 +1,7 @@
 """repro.core — the paper's contribution: SFS two-level scheduling.
 
 Public API:
+  spec.ExperimentSpec / run_experiment — unified experiment-spec layer
   workload.FaaSBenchConfig / generate  — FaaSBench (§VII)
   simulator.SimConfig / simulate       — discrete-event multicore simulator
   simulator.ClusterSimConfig / simulate_cluster — multi-server mode
@@ -10,15 +11,21 @@ Public API:
   metrics                              — RTE / turnaround / headline stats
 """
 from repro.core.workload import FaaSBenchConfig, Request, generate
+from repro.core.spec import (DispatchSpec, ExperimentResult, ExperimentSpec,
+                             PredictorSpec, SchedulerSpec, ServerSpec,
+                             TickWorkloadSpec, run_experiment)
 from repro.core.simulator import (ClusterSimConfig, ClusterSimResult,
                                   SimConfig, SimResult, JobStats, simulate,
                                   simulate_cluster)
 from repro.core.dispatch import make_dispatch, route_hinted
 from repro.core.predict import EtaPredictor, make_predictor
-from repro.core import dispatch, policies, predict, metrics
+from repro.core import dispatch, policies, predict, metrics, spec
 
 __all__ = ["FaaSBenchConfig", "Request", "generate", "SimConfig",
            "SimResult", "JobStats", "simulate", "ClusterSimConfig",
            "ClusterSimResult", "simulate_cluster", "make_dispatch",
            "route_hinted", "EtaPredictor", "make_predictor",
-           "dispatch", "policies", "predict", "metrics"]
+           "DispatchSpec", "ExperimentResult", "ExperimentSpec",
+           "PredictorSpec", "SchedulerSpec", "ServerSpec",
+           "TickWorkloadSpec", "run_experiment",
+           "dispatch", "policies", "predict", "metrics", "spec"]

@@ -40,6 +40,8 @@ import hashlib
 from collections import deque
 from typing import Optional, Sequence
 
+from repro.core.spec import DISPATCH_REGISTRY, DispatchSpec
+
 
 class ServerView:
     """Scheduling-state view of one server, as the dispatcher sees it.
@@ -103,6 +105,7 @@ def _hash(rid: int, salt: int) -> int:
     return int.from_bytes(h.digest(), "little")
 
 
+@DISPATCH_REGISTRY.register("hash")
 class HashDispatch(DispatchPolicy):
     """Power-of-two-choices over consistent hashing (legacy Router)."""
     name = "hash"
@@ -119,6 +122,7 @@ class HashDispatch(DispatchPolicy):
                      <= self.views[b].outstanding()) else b
 
 
+@DISPATCH_REGISTRY.register("least-outstanding")
 class LeastOutstandingDispatch(DispatchPolicy):
     name = "least-outstanding"
 
@@ -126,6 +130,7 @@ class LeastOutstandingDispatch(DispatchPolicy):
         return self._least_outstanding()
 
 
+@DISPATCH_REGISTRY.register("pull")
 class PullDispatch(DispatchPolicy):
     """Worker-initiated dispatch: arrivals stay central, idle servers pull.
 
@@ -152,6 +157,7 @@ class PullDispatch(DispatchPolicy):
         return None
 
 
+@DISPATCH_REGISTRY.register("sfs-aware")
 class SFSAwareDispatch(DispatchPolicy):
     """Three-level SFS: route by ETA class, bypass under overload.
 
@@ -218,7 +224,7 @@ class SFSAwareDispatch(DispatchPolicy):
                                   self.views[i].outstanding(), i))
 
 
-POLICIES = ("hash", "least-outstanding", "pull", "sfs-aware")
+POLICIES = tuple(DISPATCH_REGISTRY)
 
 
 def route_hinted(policy: DispatchPolicy, predictor, rid: int, func_id,
@@ -237,10 +243,10 @@ def route_hinted(policy: DispatchPolicy, predictor, rid: int, func_id,
     return policy.route(rid, eta, t), eta
 
 
-def make_dispatch(policy: str, views: Sequence[ServerView],
+def make_dispatch(policy, views: Sequence[ServerView],
                   **kw) -> DispatchPolicy:
-    cls = {"hash": HashDispatch,
-           "least-outstanding": LeastOutstandingDispatch,
-           "pull": PullDispatch,
-           "sfs-aware": SFSAwareDispatch}[policy]
-    return cls(views, **kw)
+    """Build a dispatch policy from a name, a ``"name:k=v"`` string, or a
+    :class:`~repro.core.spec.DispatchSpec` (registry-backed).  Explicit
+    ``kw`` overrides spec args."""
+    spec = DispatchSpec.parse(policy)
+    return DISPATCH_REGISTRY.get(spec.name)(views, **{**spec.kwargs, **kw})

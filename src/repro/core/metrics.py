@@ -78,6 +78,9 @@ def compare(treat: SimResult, base: SimResult,
 # ---------------------------------------------------------------------------
 
 DEFAULT_BUCKET_EDGES_S = (0.1, 1.0)     # short < 100 ms <= medium < 1 s <= long
+# tick-engine edges (ticks = decode tokens): straddle the bimodal
+# synthetic workload (short 2-8, long 30-80)
+DEFAULT_BUCKET_EDGES_T = (10, 40)
 
 
 def bucket_labels(edges: Sequence[float], unit: str = "s") -> list:

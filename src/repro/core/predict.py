@@ -34,6 +34,8 @@ import bisect
 from collections import deque
 from typing import Optional
 
+from repro.core.spec import PREDICTOR_REGISTRY, PredictorSpec
+
 
 class EtaPredictor:
     """Duration-predictor interface for cluster dispatch.
@@ -61,6 +63,7 @@ class EtaPredictor:
         return self.predict(func_id)
 
 
+@PREDICTOR_REGISTRY.register("oracle")
 class OracleEta(EtaPredictor):
     """Front-end knows the true demand (PR 1's ``hinted=True``)."""
 
@@ -73,6 +76,7 @@ class OracleEta(EtaPredictor):
         return true_eta
 
 
+@PREDICTOR_REGISTRY.register("none")
 class NoneEta(EtaPredictor):
     """Blind dispatch (PR 1's ``hinted=False``): every request routes as
     unknown, i.e. optimistically short."""
@@ -83,6 +87,7 @@ class NoneEta(EtaPredictor):
         return None
 
 
+@PREDICTOR_REGISTRY.register("history")
 class HistoryEta(EtaPredictor):
     """Per-function online mean/EWMA with a global-quantile cold start.
 
@@ -108,7 +113,10 @@ class HistoryEta(EtaPredictor):
             raise ValueError(f"unknown history mode: {mode!r}")
         self.alpha = alpha
         self.mode = mode
-        self.min_obs = int(min_obs)
+        # a function needs at least one observation before per-function
+        # state exists, so min_obs=0 would KeyError on never-seen ids —
+        # clamp; the cold-start fallback is the 0-observation answer
+        self.min_obs = max(1, int(min_obs))
         self.cold_quantile = float(cold_quantile)
         self.n_observed = 0
         self._mean: dict = {}
@@ -167,6 +175,7 @@ class HistoryEta(EtaPredictor):
         return self.global_quantile()
 
 
+@PREDICTOR_REGISTRY.register("class")
 class ClassEta(HistoryEta):
     """Short/long classifier with a safety margin, per Kaffes et al.
 
@@ -207,38 +216,18 @@ class ClassEta(HistoryEta):
                    self.global_quantile(self.long_quantile))
 
 
-PREDICTORS = ("oracle", "none", "history", "class")
-
-_CLASSES = {"oracle": OracleEta, "none": NoneEta,
-            "history": HistoryEta, "class": ClassEta}
-
-
-def _coerce(v: str):
-    for cast in (int, float):
-        try:
-            return cast(v)
-        except ValueError:
-            pass
-    return v
+PREDICTORS = tuple(PREDICTOR_REGISTRY)
 
 
 def make_predictor(spec="oracle") -> EtaPredictor:
     """Build a predictor from a spec: an :class:`EtaPredictor` instance
-    (returned as-is, so one object can be shared/pre-trained), or a
-    string ``"name"`` / ``"name:key=val,key=val"``, e.g.
-    ``"history:alpha=0.25,mode=median"``."""
+    (returned as-is, so one object can be shared/pre-trained), a
+    :class:`~repro.core.spec.PredictorSpec`, or a string ``"name"`` /
+    ``"name:key=val,key=val"``, e.g.
+    ``"history:alpha=0.25,mode=median"`` (registry-backed)."""
     if isinstance(spec, EtaPredictor):
         return spec
-    name, _, argstr = str(spec).partition(":")
-    if name not in _CLASSES:
-        raise ValueError(f"unknown predictor {name!r}; "
-                         f"expected one of {PREDICTORS}")
-    kw = {}
-    if argstr:
-        for part in argstr.split(","):
-            k, _, v = part.partition("=")
-            kw[k.strip()] = _coerce(v.strip())
-    return _CLASSES[name](**kw)
+    return PredictorSpec.parse(spec).build()
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,7 @@ from typing import Optional
 from repro.core.dispatch import (PullDispatch, ServerView, make_dispatch,
                                  route_hinted)
 from repro.core.predict import make_predictor
+from repro.core.spec import resolve_dispatch
 from repro.core.workload import Request
 
 _EPS = 1e-12
@@ -78,6 +79,12 @@ class SimConfig:
     # the backlog grows without bound, while SFS's run-to-completion FILTER
     # keeps the switch rate (and thus effective load) near the offered load.
     ctx_switch_cost_s: float = 100e-6
+
+    def to_spec(self):
+        """Equivalent :class:`~repro.core.spec.ServerSpec` (lossless;
+        round-trips through ``ServerSpec.to_sim_config()``)."""
+        from repro.core.spec import ServerSpec
+        return ServerSpec.from_sim_config(self)
 
 
 @dataclasses.dataclass
@@ -680,22 +687,51 @@ class _SimView(ServerView):
 @dataclasses.dataclass
 class ClusterSimConfig:
     n_servers: int = 4
-    dispatch: str = "hash"       # hash | least-outstanding | pull | sfs-aware
+    # dispatch policy: a name ("hash" | "least-outstanding" | "pull" |
+    # "sfs-aware"), a "name:key=val,..." spec string, or a
+    # repro.core.spec.DispatchSpec
+    dispatch: object = "hash"
     server: SimConfig = dataclasses.field(default_factory=SimConfig)
+    # heterogeneous mode: an explicit per-server SimConfig list
+    # (mixed cores / policies / knobs).  Overrides n_servers x server.
+    servers: Optional[list] = None
     # duration predictor feeding dispatch its ETA hints
     # (repro.core.predict): "oracle" = the front-end knows each
     # request's true service demand (PR 1's hinted=True), "none" =
     # dispatch flies blind (hinted=False), "history" / "class" = learned
     # online from finished requests.  Also accepts an EtaPredictor
-    # instance (shared / pre-trained) or a "name:key=val,..." spec.
+    # instance (shared / pre-trained), a PredictorSpec, or a
+    # "name:key=val,..." spec.
     predictor: object = "oracle"
     # router -> server network delay: a routed request is injected at
     # arrival + this, so online policies route on slightly stale state
     dispatch_latency_s: float = 0.0
-    # sfs-aware cluster knobs (units: seconds, like the per-server S)
+    # sfs-aware cluster knobs (units: seconds, like the per-server S);
+    # explicit args on a dispatch spec take precedence over these
     overload_factor: float = 3.0
     adaptive_window: int = 100
     slice_init_s: float = 0.1
+
+    def server_configs(self) -> list:
+        """The per-server SimConfig list both modes reduce to."""
+        if self.servers is not None:
+            return [dataclasses.replace(s) for s in self.servers]
+        return [dataclasses.replace(self.server)
+                for _ in range(self.n_servers)]
+
+    def to_spec(self, workload=None):
+        """Equivalent :class:`~repro.core.spec.ExperimentSpec` (golden-
+        pinned: running it reproduces this config's results bit-exact)."""
+        from repro.core.spec import ExperimentSpec
+        return ExperimentSpec(
+            engine="des",
+            servers=tuple(sc.to_spec() for sc in self.server_configs()),
+            dispatch=resolve_dispatch(self.dispatch,
+                                      overload_factor=self.overload_factor,
+                                      adaptive_window=self.adaptive_window,
+                                      slice_init=self.slice_init_s),
+            predictor=self.predictor, workload=workload,
+            dispatch_latency=self.dispatch_latency_s)
 
 
 @dataclasses.dataclass
@@ -717,6 +753,9 @@ class ClusterSimResult:
 class ClusterSimulator:
     """Drives N per-server :class:`Simulator` instances from one shared
     arrival stream through a :mod:`repro.core.dispatch` policy.
+    Servers may be heterogeneous (``cfg.servers``: per-server SimConfigs
+    with mixed cores / policies), typically declared through
+    :class:`repro.core.spec.ExperimentSpec`.
 
     The global event loop interleaves server event heaps and the arrival
     stream in timestamp order, so online policies (least-outstanding,
@@ -731,22 +770,21 @@ class ClusterSimulator:
     """
 
     def __init__(self, requests, cfg: ClusterSimConfig):
-        if cfg.server.policy in ("ideal",):
+        server_cfgs = cfg.server_configs()
+        if any(sc.policy == "ideal" for sc in server_cfgs):
             raise ValueError("per-server policy 'ideal' has no event loop")
         self.reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
         self.cfg = cfg
         self.predictor = make_predictor(cfg.predictor)
-        self.servers = [Simulator([], dataclasses.replace(cfg.server))
-                        for _ in range(cfg.n_servers)]
+        self.servers = [Simulator([], sc) for sc in server_cfgs]
         for s in self.servers:
             s.on_finish = self._observe_finish
         views = [_SimView(s) for s in self.servers]
-        kw = {}
-        if cfg.dispatch == "sfs-aware":
-            kw = dict(overload_factor=cfg.overload_factor,
-                      adaptive_window=cfg.adaptive_window,
-                      slice_init=cfg.slice_init_s)
-        self.policy = make_dispatch(cfg.dispatch, views, **kw)
+        self.policy = make_dispatch(
+            resolve_dispatch(cfg.dispatch,
+                             overload_factor=cfg.overload_factor,
+                             adaptive_window=cfg.adaptive_window,
+                             slice_init=cfg.slice_init_s), views)
         self.central: deque = deque()          # (req, eta) under pull
         self.eta_log: dict[int, Optional[float]] = {}
 

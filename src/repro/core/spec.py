@@ -1,0 +1,674 @@
+"""Typed, registry-backed experiment specs — the unified config surface.
+
+Before this layer the repo composed its three scheduling levels through
+four divergent config dataclasses (``SimConfig``, ``ClusterSimConfig``,
+``ClusterConfig``, ``EngineConfig``) and three hardcoded string+kwargs
+factories (``make_dispatch``, ``make_predictor``, ``make_scheduler``),
+with the sfs-aware dispatch wiring duplicated in both cluster owners.
+This module is the single declarative surface over all of it:
+
+* ``SchedulerSpec`` / ``DispatchSpec`` / ``PredictorSpec`` — typed
+  ``name + args`` specs with a canonical string form
+  (``"sfs-aware:overload_factor=3,adaptive_window=100"``, short aliases
+  like ``O=3,N=100`` accepted on parse) that round-trips:
+  ``parse(str(spec)) == spec``.
+* decorator registries (``SCHEDULER_REGISTRY``, ``DISPATCH_REGISTRY``,
+  ``PREDICTOR_REGISTRY``) — implementations self-register at their
+  definition site; the factory dicts are gone.
+* ``ServerSpec`` — one server's shape: ``cores`` (DES cores == tick
+  decode lanes), its scheduler spec, and tick-engine cache ``slots``.
+  Heterogeneous clusters are first-class: ``ExperimentSpec.servers`` is
+  a per-server list, consumed by both execution engines.
+* ``ExperimentSpec`` — workload + engine choice (``des`` | ``tick``) +
+  servers + dispatch + predictor, runnable through the single entry
+  point :func:`run_experiment`, which returns one unified
+  :class:`ExperimentResult` schema for every benchmark.
+
+Scheduler knob names are canonical and unit-free here (``slice_init``,
+``slice``, ``poll_interval`` …); the per-engine converters map them onto
+each engine's native fields (``slice_init_s`` seconds in the DES,
+``slice_init`` ticks in the tick engine) — ending the drift where the
+same knob meant different things across layers.  Legacy configs convert
+losslessly (``SimConfig.to_spec()``, ``ClusterSimConfig.to_spec()``,
+``EngineConfig.to_spec()``) and reproduce their pre-spec results
+bit-exact (pinned in ``tests/test_spec.py``).
+
+This module imports nothing heavier than numpy at module scope; engine
+construction is lazy, so the spec layer stays importable everywhere
+(including jax-free CI shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import importlib
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = [
+    "Registry", "SCHEDULER_REGISTRY", "DISPATCH_REGISTRY",
+    "PREDICTOR_REGISTRY", "DES_POLICIES", "SchedulerSpec", "DispatchSpec",
+    "PredictorSpec", "ServerSpec", "TickWorkloadSpec", "ExperimentSpec",
+    "ExperimentResult", "run_experiment", "resolve_dispatch",
+]
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+
+class Registry:
+    """Name -> implementation class registry with decorator registration.
+
+    ``provider`` is the module whose import populates the registry; it is
+    imported lazily on first lookup, so specs can be parsed and compared
+    without pulling any engine code.
+    """
+
+    def __init__(self, kind: str, provider: str):
+        self.kind = kind
+        self.provider = provider
+        self._classes: dict = {}
+        self._loaded = False
+
+    def register(self, name: str):
+        def deco(cls):
+            prev = self._classes.get(name)
+            if prev is not None and (prev.__module__, prev.__qualname__) \
+                    != (cls.__module__, cls.__qualname__):
+                raise ValueError(
+                    f"duplicate {self.kind} registration: {name!r}")
+            # same module+qualname == a provider re-import (reload, or a
+            # retried import after a transient failure): last wins
+            self._classes[name] = cls
+            return cls
+        return deco
+
+    def _ensure(self):
+        # gate on successful provider import, not on _classes being
+        # non-empty — a partial (failed) import must be retried, not
+        # frozen as "these are all the implementations"
+        if not self._loaded:
+            importlib.import_module(self.provider)
+            self._loaded = True
+
+    def names(self) -> tuple:
+        self._ensure()
+        return tuple(self._classes)
+
+    def get(self, name: str):
+        self._ensure()
+        try:
+            return self._classes[name]
+        except KeyError:
+            raise ValueError(f"unknown {self.kind} {name!r}; "
+                             f"expected one of {tuple(self._classes)}") \
+                from None
+
+    def __contains__(self, name) -> bool:
+        self._ensure()
+        return name in self._classes
+
+    def __iter__(self):
+        self._ensure()
+        return iter(self._classes)
+
+
+SCHEDULER_REGISTRY = Registry("scheduler", "repro.serving.schedulers")
+DISPATCH_REGISTRY = Registry("dispatch", "repro.core.dispatch")
+PREDICTOR_REGISTRY = Registry("predictor", "repro.core.predict")
+
+# DES per-server policies are simulator modes, not factory classes, so
+# they are validated against this fixed set instead of a registry.
+DES_POLICIES = ("sfs", "cfs", "fifo", "rr", "srtf", "ideal")
+
+
+# ---------------------------------------------------------------------------
+# name:key=val spec grammar
+# ---------------------------------------------------------------------------
+
+
+def _coerce(v: str):
+    """Parse one spec value: int, float, bool, None, else string."""
+    s = str(v).strip()
+    low = s.lower()
+    if low == "true":
+        return True
+    if low == "false":
+        return False
+    if low == "null" or s == "None":
+        return None
+    for cast in (int, float):
+        try:
+            return cast(s)
+        except ValueError:
+            pass
+    return s
+
+
+class _SpecBase:
+    """Shared behaviour of the ``name + args`` spec family.
+
+    ``args`` is a canonically-sorted tuple of ``(key, value)`` pairs —
+    hashable, order-independent, and alias-normalized at construction,
+    so two specs that mean the same thing compare equal regardless of
+    how they were written.
+    """
+
+    ALIASES: dict = {}
+
+    def __post_init__(self):
+        raw = self.args.items() if isinstance(self.args, dict) else self.args
+        seen: dict = {}
+        for k, v in raw:
+            k = self.ALIASES.get(str(k), str(k))
+            if not k or any(c in k for c in ":,= "):
+                raise ValueError(f"spec arg key {k!r} contains grammar "
+                                 "separators")
+            # fail fast on values the unquoted grammar cannot carry —
+            # non-scalars, separators, and strings that reparse as
+            # another literal ("true", "5", ...) — keeping
+            # parse(str(spec)) == spec an invariant, not a convention
+            if not isinstance(v, (str, int, float, bool, type(None))):
+                raise ValueError(f"spec arg {k}={v!r}: only scalar "
+                                 "values survive the string grammar")
+            if isinstance(v, str):
+                if any(c in v for c in ":,="):
+                    raise ValueError(f"spec arg {k}={v!r} contains "
+                                     "grammar separators")
+                if _coerce(v) != v:
+                    raise ValueError(
+                        f"spec arg {k}={v!r} would not round-trip "
+                        f"through the string form (parses as "
+                        f"{_coerce(v)!r})")
+            seen[k] = v
+        object.__setattr__(self, "args", tuple(sorted(seen.items())))
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.args)
+
+    @classmethod
+    def parse(cls, spec):
+        """``"name"`` / ``"name:k=v,k=v"`` (or an instance) -> spec."""
+        if isinstance(spec, cls):
+            return spec
+        if isinstance(spec, _SpecBase):
+            raise TypeError(f"cannot parse {type(spec).__name__} "
+                            f"as {cls.__name__}")
+        name, _, argstr = str(spec).partition(":")
+        args = []
+        for part in argstr.split(",") if argstr else ():
+            k, eq, v = part.partition("=")
+            if not eq:
+                raise ValueError(f"malformed spec arg {part!r} in {spec!r} "
+                                 "(expected key=value)")
+            args.append((k.strip(), _coerce(v)))
+        return cls(name=name.strip(), args=tuple(args))
+
+    def __str__(self) -> str:
+        if not self.args:
+            return self.name
+        return self.name + ":" + ",".join(f"{k}={v}" for k, v in self.args)
+
+    def with_args(self, **kw):
+        """New spec with ``kw`` set (overriding existing keys)."""
+        merged = self.kwargs
+        merged.update(kw)
+        return dataclasses.replace(self, args=tuple(merged.items()))
+
+    def with_defaults(self, **kw):
+        """New spec with ``kw`` filled in only where not already set."""
+        have = self.kwargs
+        merged = {self.ALIASES.get(k, k): v for k, v in kw.items()}
+        merged.update(have)
+        return dataclasses.replace(self, args=tuple(merged.items()))
+
+
+# canonical scheduler knob -> DES SimConfig field (seconds)
+DES_SCHED_FIELDS = {
+    "slice": "slice_s",
+    "slice_init": "slice_init_s",
+    "adaptive_window": "adaptive_window",
+    "overload_factor": "overload_factor",
+    "io_aware": "io_aware",
+    "poll_interval": "poll_interval_s",
+    "hinted_demotion": "hinted_demotion",
+    "rr_quantum": "rr_quantum_s",
+    "cfs_latency": "cfs_latency_s",
+    "cfs_min_gran": "cfs_min_gran_s",
+    "ctx_switch_cost": "ctx_switch_cost_s",
+}
+
+# canonical scheduler knob -> tick-engine make_scheduler kwarg (ticks)
+TICK_SCHED_FIELDS = {
+    "slice": "slice_ticks",
+    "slice_init": "slice_init",
+    "adaptive_window": "adaptive_window",
+    "overload_factor": "overload_factor",
+    "stall_aware": "stall_aware",
+    "hinted_demotion": "hinted_demotion",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerSpec(_SpecBase):
+    """Per-server scheduling policy + knobs, engine-agnostic.
+
+    Knob names are canonical (``slice``, ``slice_init``,
+    ``adaptive_window``, ``overload_factor``, …); the engine converters
+    (:meth:`ServerSpec.to_sim_config` / :meth:`ServerSpec.to_engine_config`)
+    map them to the engine's native field names and units.
+    """
+
+    name: str = "sfs"
+    args: tuple = ()
+
+    ALIASES = {"O": "overload_factor", "N": "adaptive_window",
+               "window": "adaptive_window", "S": "slice",
+               "init": "slice_init"}
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchSpec(_SpecBase):
+    """Cluster dispatch policy + knobs (level 3).
+
+    ``"sfs-aware:O=3,N=100"`` parses to
+    ``DispatchSpec("sfs-aware", (("adaptive_window", 100),
+    ("overload_factor", 3)))``.  Args map 1:1 onto the policy
+    constructor's kwargs (``overload_factor``, ``adaptive_window``,
+    ``slice_init`` — owner units: DES seconds, tick-engine ticks).
+    """
+
+    name: str = "hash"
+    args: tuple = ()
+
+    ALIASES = {"O": "overload_factor", "N": "adaptive_window",
+               "window": "adaptive_window", "init": "slice_init"}
+
+    def build(self, views):
+        cls = DISPATCH_REGISTRY.get(self.name)
+        return cls(views, **self.kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorSpec(_SpecBase):
+    """Duration-predictor spec (``repro.core.predict``).
+
+    Exposes every predictor knob declaratively — including the ``class``
+    predictor's quantile knobs (``safety_margin``, ``boundary_quantile``,
+    ``short_quantile``, ``long_quantile``), swept in
+    ``benchmarks/predict_sweep.py``.  ``"history:warmup=2"`` ==
+    ``"history:min_obs=2"``.
+    """
+
+    name: str = "oracle"
+    args: tuple = ()
+
+    ALIASES = {"warmup": "min_obs", "margin": "safety_margin",
+               "boundary": "boundary_quantile", "short": "short_quantile",
+               "long": "long_quantile", "cold": "cold_quantile"}
+
+    def build(self):
+        cls = PREDICTOR_REGISTRY.get(self.name)
+        return cls(**self.kwargs)
+
+
+def resolve_dispatch(policy, *, overload_factor=None, adaptive_window=None,
+                     slice_init=None) -> DispatchSpec:
+    """The one shared dispatch-wiring path for both cluster owners.
+
+    Parses ``policy`` (name, ``"name:k=v"`` string, or DispatchSpec) and,
+    for ``sfs-aware``, fills the owner's legacy knob fields in as
+    defaults — explicit spec args always win.  Replaces the hand-rolled
+    ``kw = {...}`` blocks that used to be duplicated in
+    ``ClusterSimulator`` and ``Cluster``.
+    """
+    spec = DispatchSpec.parse(policy)
+    if spec.name == "sfs-aware":
+        legacy = {"overload_factor": overload_factor,
+                  "adaptive_window": adaptive_window,
+                  "slice_init": slice_init}
+        spec = spec.with_defaults(**{k: v for k, v in legacy.items()
+                                     if v is not None})
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Server / workload / experiment specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerSpec:
+    """One server's shape: parallelism + scheduler (+ tick cache shape).
+
+    ``cores`` is the server's parallelism in both engines (DES cores ==
+    tick decode lanes).  ``slots`` (resident cache slots, default
+    ``16 * cores``) and ``max_len`` (per-slot cache capacity) are
+    tick-engine notions; the DES ignores them.
+    """
+
+    cores: int = 4
+    scheduler: SchedulerSpec = SchedulerSpec("sfs")
+    slots: Optional[int] = None
+    max_len: Optional[int] = None
+
+    def __post_init__(self):
+        if not isinstance(self.scheduler, SchedulerSpec):
+            object.__setattr__(self, "scheduler",
+                               SchedulerSpec.parse(self.scheduler))
+
+    # -- converters (spec <-> legacy configs) ---------------------------
+    def to_sim_config(self):
+        """DES :class:`~repro.core.simulator.SimConfig` for this server."""
+        from repro.core.simulator import SimConfig
+        if self.scheduler.name not in DES_POLICIES:
+            raise ValueError(
+                f"scheduler {self.scheduler.name!r} is not a DES policy; "
+                f"expected one of {DES_POLICIES}")
+        kw = {}
+        for k, v in self.scheduler.args:
+            if k not in DES_SCHED_FIELDS:
+                raise ValueError(f"unknown scheduler knob {k!r} for the "
+                                 f"DES engine; expected one of "
+                                 f"{tuple(DES_SCHED_FIELDS)}")
+            kw[DES_SCHED_FIELDS[k]] = v
+        return SimConfig(cores=self.cores, policy=self.scheduler.name, **kw)
+
+    def to_engine_config(self):
+        """Tick :class:`~repro.serving.engine.EngineConfig` (lazy import;
+        jax only loads when a tick experiment actually runs)."""
+        from repro.serving.engine import EngineConfig
+        SCHEDULER_REGISTRY.get(self.scheduler.name)   # validate early
+        kw = {}
+        for k, v in self.scheduler.args:
+            if k not in TICK_SCHED_FIELDS:
+                raise ValueError(f"unknown scheduler knob {k!r} for the "
+                                 f"tick engine; expected one of "
+                                 f"{tuple(TICK_SCHED_FIELDS)}")
+            kw[TICK_SCHED_FIELDS[k]] = v
+        extra = ({} if self.max_len is None
+                 else {"max_len": self.max_len})
+        return EngineConfig(lanes=self.cores,
+                            n_slots=(self.slots if self.slots is not None
+                                     else 16 * self.cores),
+                            policy=self.scheduler.name, sched_kw=kw,
+                            **extra)
+
+    @classmethod
+    def from_sim_config(cls, cfg) -> "ServerSpec":
+        """Lossless converse of :meth:`to_sim_config` (non-default
+        fields only, so specs stay terse)."""
+        from repro.core.simulator import SimConfig
+        base = SimConfig()
+        args = tuple((canon, getattr(cfg, field))
+                     for canon, field in DES_SCHED_FIELDS.items()
+                     if getattr(cfg, field) != getattr(base, field))
+        return cls(cores=cfg.cores,
+                   scheduler=SchedulerSpec(cfg.policy, args))
+
+    @classmethod
+    def from_engine_config(cls, ecfg) -> "ServerSpec":
+        """Lossless converse of :meth:`to_engine_config`."""
+        inv = {v: k for k, v in TICK_SCHED_FIELDS.items()}
+        args = []
+        for k, v in ecfg.sched_kw.items():
+            if k not in inv:
+                raise ValueError(f"sched_kw {k!r} has no canonical spec "
+                                 "knob")
+            args.append((inv[k], v))
+        return cls(cores=ecfg.lanes, scheduler=SchedulerSpec(
+            ecfg.policy, tuple(args)), slots=ecfg.n_slots,
+            max_len=ecfg.max_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class TickWorkloadSpec:
+    """Declarative bimodal open-loop workload for the tick engine.
+
+    The same stream every tick benchmark used to hand-roll: ``short_frac``
+    of requests draw a short decode demand, the rest a long one; IATs are
+    exponential, normalized so offered load over ``total_lanes`` (the
+    whole cluster's lanes, supplied at generation time) equals ``load``.
+    ``hints`` attaches the front-end ``eta_hint`` (max-tokens cap).
+    """
+
+    n: int = 1000
+    load: float = 0.8
+    seed: int = 7
+    short_frac: float = 0.8
+    short_range: tuple = (2, 8)
+    long_range: tuple = (30, 80)
+    prompt_len: int = 4
+    hints: bool = True
+
+    def generate(self, total_lanes: int) -> list:
+        from repro.serving.request import Request
+        rng = np.random.default_rng(self.seed)
+        svc = np.where(rng.random(self.n) < self.short_frac,
+                       rng.integers(*self.short_range, self.n),
+                       rng.integers(*self.long_range, self.n))
+        span = svc.sum() / (self.load * total_lanes)
+        iats = rng.exponential(1.0, self.n)
+        arr = np.cumsum(iats * span / iats.sum()).astype(int)
+        return [Request(rid=i, arrival=int(arr[i]),
+                        prompt_len=self.prompt_len, n_tokens=int(svc[i]),
+                        eta_hint=int(svc[i]) + 1 if self.hints else None)
+                for i in range(self.n)]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """A complete experiment: workload + engine + per-server shapes +
+    dispatch + predictor.
+
+    ``servers`` is a per-server list — mixed cores/lanes/slots/policies
+    are first-class in both engines.  ``workload`` is a
+    :class:`~repro.core.workload.FaaSBenchConfig` (DES), a
+    :class:`TickWorkloadSpec` (tick), or None when requests are passed to
+    :func:`run_experiment` directly.  ``dispatch_latency`` is the DES
+    router->server delay in seconds (the tick engine has no latency
+    model; it must stay 0 there).
+    """
+
+    engine: str = "des"                      # des | tick
+    servers: tuple = (ServerSpec(), ServerSpec(), ServerSpec(),
+                      ServerSpec())
+    dispatch: DispatchSpec = DispatchSpec("hash")
+    predictor: object = PredictorSpec("oracle")
+    workload: object = None
+    dispatch_latency: float = 0.0
+
+    def __post_init__(self):
+        if self.engine not in ("des", "tick"):
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             "expected 'des' or 'tick'")
+        servers = tuple(self.servers)
+        if not servers:
+            raise ValueError("ExperimentSpec needs at least one server")
+        for s in servers:
+            if not isinstance(s, ServerSpec):
+                raise TypeError(f"servers must be ServerSpec, got {s!r}")
+        object.__setattr__(self, "servers", servers)
+        if not isinstance(self.dispatch, DispatchSpec):
+            object.__setattr__(self, "dispatch",
+                               DispatchSpec.parse(self.dispatch))
+        if isinstance(self.predictor, (str, PredictorSpec)):
+            object.__setattr__(self, "predictor",
+                               PredictorSpec.parse(self.predictor))
+        if self.engine == "tick" and self.dispatch_latency:
+            raise ValueError("dispatch_latency is DES-only (the tick "
+                             "engine has no network-delay model)")
+
+    @property
+    def total_cores(self) -> int:
+        return sum(s.cores for s in self.servers)
+
+    # -- converters -----------------------------------------------------
+    def to_cluster_sim_config(self):
+        from repro.core.simulator import ClusterSimConfig
+        return ClusterSimConfig(
+            n_servers=len(self.servers),
+            servers=[s.to_sim_config() for s in self.servers],
+            dispatch=self.dispatch, predictor=self.predictor,
+            dispatch_latency_s=self.dispatch_latency)
+
+    def to_cluster_config(self):
+        from repro.serving.cluster import ClusterConfig
+        return ClusterConfig(policy=self.dispatch,
+                             predictor=self.predictor)
+
+
+# ---------------------------------------------------------------------------
+# Unified result schema
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """One result schema for every benchmark, whichever engine ran.
+
+    Per-request arrays are rid-ordered; ``unit`` is ``"s"`` (DES) or
+    ``"t"`` (ticks).  ``raw`` keeps the engine-native result
+    (:class:`~repro.core.simulator.ClusterSimResult` or the finished
+    serving requests) for anything schema-shaped access can't answer.
+    """
+
+    spec: ExperimentSpec
+    engine: str
+    unit: str
+    rids: np.ndarray
+    service: np.ndarray
+    turnaround: np.ndarray
+    rte: np.ndarray
+    finish: np.ndarray
+    n_ctx: np.ndarray
+    demoted: np.ndarray
+    policy: str
+    predictor: str
+    dispatch_counts: list
+    overload_bypasses: int
+    eta_log: dict
+    dispatch_S: Optional[float]
+    wall_s: float
+    raw: object
+
+    @property
+    def n(self) -> int:
+        return len(self.rids)
+
+    def buckets(self, edges: Optional[Sequence[float]] = None,
+                ps=(50, 99)) -> dict:
+        """Per-service-bucket turnaround percentiles + mean RTE
+        (``repro.core.metrics.bucket_stats`` under unit-matched edges)."""
+        from repro.core.metrics import (DEFAULT_BUCKET_EDGES_S,
+                                        DEFAULT_BUCKET_EDGES_T,
+                                        bucket_stats)
+        if edges is None:
+            edges = (DEFAULT_BUCKET_EDGES_S if self.unit == "s"
+                     else DEFAULT_BUCKET_EDGES_T)
+        return bucket_stats(self.service, self.turnaround, self.rte,
+                            edges=edges, ps=ps, unit=self.unit)
+
+    def fingerprint(self) -> str:
+        """SHA-256 of the (rid, finish, n_ctx, demoted) stream — the
+        bit-exactness currency of the golden tests."""
+        blob = repr([(int(r), f, int(c), bool(d))
+                     for r, f, c, d in zip(self.rids, self.finish.tolist(),
+                                           self.n_ctx, self.demoted)
+                     ]).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def summary(self) -> dict:
+        return {
+            "engine": self.engine, "policy": self.policy,
+            "predictor": self.predictor, "n": self.n,
+            "servers": len(self.spec.servers),
+            "dispatch_counts": list(self.dispatch_counts),
+            "overload_bypasses": self.overload_bypasses,
+            "wall_s": self.wall_s,
+        }
+
+
+# ---------------------------------------------------------------------------
+# The single entry point
+# ---------------------------------------------------------------------------
+
+
+def run_experiment(spec: ExperimentSpec, requests=None, *,
+                   max_ticks: int = 20_000_000) -> ExperimentResult:
+    """Run one :class:`ExperimentSpec` end to end.
+
+    ``requests`` overrides the spec's declarative workload with an
+    explicit request list (core requests for ``des``, serving requests
+    for ``tick``).  Deterministic given the spec/workload.
+    """
+    spec = spec if isinstance(spec, ExperimentSpec) else ExperimentSpec(
+        **spec)
+    t0 = time.time()
+    if spec.engine == "des":
+        return _run_des(spec, requests, t0)
+    return _run_tick(spec, requests, t0, max_ticks)
+
+
+def _run_des(spec: ExperimentSpec, requests, t0: float) -> ExperimentResult:
+    from repro.core.simulator import ClusterSimulator
+    from repro.core.workload import FaaSBenchConfig, generate
+    if requests is None:
+        if not isinstance(spec.workload, FaaSBenchConfig):
+            raise ValueError(
+                "DES experiment needs a FaaSBenchConfig workload (or an "
+                f"explicit request list); got {spec.workload!r}")
+        requests = generate(spec.workload)
+    res = ClusterSimulator(requests, spec.to_cluster_sim_config()).run()
+    st = res.merged.stats
+    return ExperimentResult(
+        spec=spec, engine="des", unit="s",
+        rids=np.array([s.rid for s in st]),
+        service=np.array([s.service for s in st]),
+        turnaround=np.array([s.turnaround for s in st]),
+        rte=np.array([s.rte for s in st]),
+        finish=np.array([s.finish for s in st]),
+        n_ctx=np.array([s.n_ctx for s in st]),
+        demoted=np.array([s.demoted for s in st]),
+        policy=res.policy, predictor=res.predictor,
+        dispatch_counts=list(res.dispatch_counts),
+        overload_bypasses=res.overload_bypasses,
+        eta_log=dict(res.eta_log), dispatch_S=res.dispatch_S,
+        wall_s=time.time() - t0, raw=res)
+
+
+def _run_tick(spec: ExperimentSpec, requests, t0: float,
+              max_ticks: int) -> ExperimentResult:
+    from repro.serving.cluster import Cluster
+    from repro.serving.engine import Engine
+    if requests is None:
+        if not isinstance(spec.workload, TickWorkloadSpec):
+            raise ValueError(
+                "tick experiment needs a TickWorkloadSpec workload (or an "
+                f"explicit request list); got {spec.workload!r}")
+        requests = spec.workload.generate(spec.total_cores)
+    engines = [Engine(s.to_engine_config()) for s in spec.servers]
+    cluster = Cluster(engines, spec.to_cluster_config())
+    done = cluster.run(requests, max_ticks=max_ticks)
+    return ExperimentResult(
+        spec=spec, engine="tick", unit="t",
+        rids=np.array([r.rid for r in done]),
+        service=np.array([r.service_demand for r in done],
+                         dtype=np.float64),
+        turnaround=np.array([r.turnaround for r in done],
+                            dtype=np.float64),
+        rte=np.array([r.rte for r in done], dtype=np.float64),
+        finish=np.array([r.finish for r in done]),
+        n_ctx=np.array([r.n_ctx for r in done]),
+        demoted=np.array([r.demoted for r in done]),
+        policy=cluster.policy.name, predictor=cluster.predictor.name,
+        dispatch_counts=list(cluster.dispatch_counts),
+        overload_bypasses=cluster.summary()["overload_bypasses"],
+        eta_log=dict(cluster.eta_log),
+        dispatch_S=getattr(cluster.policy, "S", None),
+        wall_s=time.time() - t0, raw=done)

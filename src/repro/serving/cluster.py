@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.dispatch import (DispatchPolicy, HashDispatch, PullDispatch,
                                  ServerView, make_dispatch, route_hinted)
 from repro.core.predict import make_predictor
+from repro.core.spec import resolve_dispatch
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 
@@ -60,17 +61,36 @@ class EngineView(ServerView):
 
 @dataclasses.dataclass
 class ClusterConfig:
-    policy: str = "hash"        # hash | least-outstanding | pull | sfs-aware
+    # dispatch policy: a name ("hash" | "least-outstanding" | "pull" |
+    # "sfs-aware"), a "name:key=val,..." spec string, or a
+    # repro.core.spec.DispatchSpec
+    policy: object = "hash"
     # duration predictor feeding dispatch its ETA hints
     # (repro.core.predict): "oracle" passes the front-end ``eta_hint``
     # through unchanged (legacy behaviour), "none" routes blind,
     # "history" / "class" learn online from finished requests.  Also
-    # accepts an EtaPredictor instance or a "name:key=val,..." spec.
+    # accepts an EtaPredictor instance, a PredictorSpec, or a
+    # "name:key=val,..." spec.
     predictor: object = "oracle"
-    # sfs-aware knobs (cluster-level O x S rule, units = engine ticks)
+    # sfs-aware knobs (cluster-level O x S rule, units = engine ticks);
+    # explicit args on a dispatch spec take precedence over these
     overload_factor: float = 3.0
     adaptive_window: int = 100
     slice_init: float = 32.0
+
+    def to_spec(self, servers):
+        """Equivalent :class:`~repro.core.spec.ExperimentSpec`;
+        ``servers`` supplies the per-engine ServerSpecs (the legacy
+        config never knew them — engines were built separately, e.g.
+        ``cfg.to_spec([e.ecfg.to_spec() for e in engines])``)."""
+        from repro.core.spec import ExperimentSpec
+        return ExperimentSpec(
+            engine="tick", servers=tuple(servers),
+            dispatch=resolve_dispatch(self.policy,
+                                      overload_factor=self.overload_factor,
+                                      adaptive_window=self.adaptive_window,
+                                      slice_init=self.slice_init),
+            predictor=self.predictor)
 
 
 class Cluster:
@@ -81,13 +101,11 @@ class Cluster:
         self.engines = list(engines)
         self.cfg = cfg or ClusterConfig()
         views = [EngineView(e) for e in self.engines]
-        kw = {}
-        if self.cfg.policy == "sfs-aware":
-            kw = dict(overload_factor=self.cfg.overload_factor,
-                      adaptive_window=self.cfg.adaptive_window,
-                      slice_init=self.cfg.slice_init)
-        self.policy: DispatchPolicy = make_dispatch(self.cfg.policy, views,
-                                                    **kw)
+        self.policy: DispatchPolicy = make_dispatch(
+            resolve_dispatch(self.cfg.policy,
+                             overload_factor=self.cfg.overload_factor,
+                             adaptive_window=self.cfg.adaptive_window,
+                             slice_init=self.cfg.slice_init), views)
         self.predictor = make_predictor(self.cfg.predictor)
         for e in self.engines:
             e.on_finish = self._observe_finish

@@ -37,6 +37,12 @@ class EngineConfig:
     policy: str = "sfs"
     sched_kw: dict = dataclasses.field(default_factory=dict)
 
+    def to_spec(self):
+        """Equivalent :class:`~repro.core.spec.ServerSpec` (lossless;
+        round-trips through ``ServerSpec.to_engine_config()``)."""
+        from repro.core.spec import ServerSpec
+        return ServerSpec.from_engine_config(self)
+
 
 class Engine:
     def __init__(self, ecfg: EngineConfig, model_cfg: Optional[ModelConfig]
@@ -174,7 +180,7 @@ class Engine:
 
         self.lane_busy_ticks += len(chosen_reqs)
         self.tick_log.append((t, len(chosen_reqs),
-                              len(getattr(self.scheduler, "queue", ()))))
+                              self.scheduler.queue_len()))
 
         # end-of-tick bookkeeping: finish / stall / slice accounting
         for r in chosen_reqs:

@@ -19,10 +19,10 @@ on_wake.  ``select(t)`` returns the rids to run this tick (<= lanes).
 """
 from __future__ import annotations
 
-import heapq
 from collections import deque
 from typing import Optional
 
+from repro.core.spec import SCHEDULER_REGISTRY, SchedulerSpec
 from repro.serving.request import Request
 
 
@@ -72,6 +72,7 @@ class Scheduler:
         return 0
 
 
+@SCHEDULER_REGISTRY.register("fifo")
 class FIFOScheduler(Scheduler):
     name = "fifo"
 
@@ -113,6 +114,7 @@ class FIFOScheduler(Scheduler):
         return len(self.running)
 
 
+@SCHEDULER_REGISTRY.register("cfs")
 class CFSScheduler(Scheduler):
     """Fair share: run the ``lanes`` runnable requests with min vruntime."""
     name = "cfs"
@@ -173,6 +175,7 @@ class CFSScheduler(Scheduler):
         return len(self.runnable)
 
 
+@SCHEDULER_REGISTRY.register("srtf")
 class SRTFScheduler(Scheduler):
     """Offline oracle: preemptive shortest-remaining-demand-first."""
     name = "srtf"
@@ -218,6 +221,7 @@ class SRTFScheduler(Scheduler):
         return min(self.lanes, len(self.runnable))
 
 
+@SCHEDULER_REGISTRY.register("sfs")
 class SFSScheduler(Scheduler):
     """The paper's scheduler, adapted to decode lanes (DESIGN.md §2).
 
@@ -347,7 +351,21 @@ class SFSScheduler(Scheduler):
         return len(self.cfs.runnable)
 
 
-def make_scheduler(policy: str, lanes: int, **kw) -> Scheduler:
-    cls = {"sfs": SFSScheduler, "cfs": CFSScheduler, "fifo": FIFOScheduler,
-           "srtf": SRTFScheduler}[policy]
-    return cls(lanes, **kw)
+def make_scheduler(policy, lanes: int, **kw) -> Scheduler:
+    """Build a lane scheduler from a name, a ``"name:k=v"`` string with
+    canonical knob names (``slice``, ``slice_init``, ``adaptive_window``,
+    ``overload_factor``, …), or a
+    :class:`~repro.core.spec.SchedulerSpec` (registry-backed).  ``kw``
+    carries tick-native kwargs (``slice_ticks`` etc.) and overrides
+    spec args."""
+    from repro.core.spec import TICK_SCHED_FIELDS
+    spec = SchedulerSpec.parse(policy)
+    cls = SCHEDULER_REGISTRY.get(spec.name)
+    mapped = {}
+    for k, v in spec.args:
+        if k not in TICK_SCHED_FIELDS:
+            raise ValueError(f"unknown scheduler knob {k!r} for the tick "
+                             f"engine; expected one of "
+                             f"{tuple(TICK_SCHED_FIELDS)}")
+        mapped[TICK_SCHED_FIELDS[k]] = v
+    return cls(lanes, **{**mapped, **kw})

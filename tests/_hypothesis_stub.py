@@ -13,7 +13,8 @@ Differences from real hypothesis — acceptable for this repo's usage:
 
 Covers: ``given`` (keyword strategies), ``settings(max_examples=...,
 deadline=...)``, ``assume``, and ``strategies.integers / floats /
-booleans / sampled_from / lists``.
+booleans / sampled_from / lists / text / none / one_of / dictionaries /
+builds`` plus ``.map`` on any strategy.
 """
 from __future__ import annotations
 
@@ -40,6 +41,17 @@ def assume(condition) -> bool:
 class SearchStrategy:
     def example_for(self, rng: np.random.Generator, index: int):
         raise NotImplementedError
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, fn):
+        self.base, self.fn = base, fn
+
+    def example_for(self, rng, index):
+        return self.fn(self.base.example_for(rng, index))
 
 
 class _Integers(SearchStrategy):
@@ -92,6 +104,52 @@ class _Lists(SearchStrategy):
         return [self.elements.example_for(rng, 2) for _ in range(size)]
 
 
+class _Text(SearchStrategy):
+    def __init__(self, alphabet, min_size=0, max_size=10):
+        self.alphabet = list(alphabet)
+        self.min_size, self.max_size = min_size, max_size
+
+    def example_for(self, rng, index):
+        if index == 0:                    # boundary: the shortest string
+            return self.alphabet[0] * self.min_size
+        size = int(rng.integers(self.min_size, self.max_size + 1))
+        return "".join(self.alphabet[int(rng.integers(len(self.alphabet)))]
+                       for _ in range(size))
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, strategies):
+        self.strategies = list(strategies)
+
+    def example_for(self, rng, index):
+        if index < len(self.strategies):      # hit every branch's boundary
+            return self.strategies[index].example_for(rng, 0)
+        branch = self.strategies[int(rng.integers(len(self.strategies)))]
+        return branch.example_for(rng, 2)
+
+
+class _Dictionaries(SearchStrategy):
+    def __init__(self, keys, values, min_size=0, max_size=10):
+        self.keys, self.values = keys, values
+        self.min_size, self.max_size = min_size, max_size
+
+    def example_for(self, rng, index):
+        if index == 0:
+            return {}
+        size = int(rng.integers(self.min_size, self.max_size + 1))
+        return {self.keys.example_for(rng, 2):
+                self.values.example_for(rng, 2) for _ in range(size)}
+
+
+class _Builds(SearchStrategy):
+    def __init__(self, target, **kw):
+        self.target, self.kw = target, kw
+
+    def example_for(self, rng, index):
+        return self.target(**{name: strat.example_for(rng, index)
+                              for name, strat in self.kw.items()})
+
+
 class _Strategies:
     @staticmethod
     def integers(min_value, max_value):
@@ -112,6 +170,26 @@ class _Strategies:
     @staticmethod
     def lists(elements, min_size=0, max_size=None):
         return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def text(alphabet="abcdefghij", min_size=0, max_size=10):
+        return _Text(alphabet, min_size, max_size)
+
+    @staticmethod
+    def none():
+        return _SampledFrom([None])
+
+    @staticmethod
+    def one_of(*strategies):
+        return _OneOf(strategies)
+
+    @staticmethod
+    def dictionaries(keys, values, min_size=0, max_size=10):
+        return _Dictionaries(keys, values, min_size, max_size)
+
+    @staticmethod
+    def builds(target, **kw):
+        return _Builds(target, **kw)
 
 
 strategies = _Strategies()

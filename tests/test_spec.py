@@ -1,0 +1,316 @@
+"""Experiment-spec layer: parse/str round-trips (property-based),
+registry integrity, legacy-config converters pinned bit-exact against
+the pre-spec paths, and heterogeneous clusters end-to-end in both
+engines."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro
+from repro.core import (ClusterSimConfig, FaaSBenchConfig, SimConfig,
+                        generate, simulate_cluster)
+from repro.core.spec import (DES_POLICIES, DISPATCH_REGISTRY,
+                             PREDICTOR_REGISTRY, SCHEDULER_REGISTRY,
+                             DispatchSpec, ExperimentSpec, PredictorSpec,
+                             SchedulerSpec, ServerSpec, TickWorkloadSpec,
+                             run_experiment)
+
+# ---------------------------------------------------------------------------
+# Registries replace the factory dicts
+# ---------------------------------------------------------------------------
+
+
+def test_registries_cover_legacy_names():
+    assert set(DISPATCH_REGISTRY.names()) == {
+        "hash", "least-outstanding", "pull", "sfs-aware"}
+    assert set(PREDICTOR_REGISTRY.names()) == {
+        "oracle", "none", "history", "class"}
+    assert set(SCHEDULER_REGISTRY.names()) == {"sfs", "cfs", "fifo", "srtf"}
+
+
+def test_registry_unknown_name_lists_alternatives():
+    with pytest.raises(ValueError, match="sfs-aware"):
+        DISPATCH_REGISTRY.get("round-robin")
+
+
+def test_registry_tolerates_provider_reimport():
+    """Re-executing a provider module (reload / retried import) re-runs
+    the decorators; same-class re-registration must not raise."""
+    import importlib
+    import repro.serving.schedulers as sched
+    importlib.reload(sched)
+    assert set(SCHEDULER_REGISTRY.names()) == {"sfs", "cfs", "fifo",
+                                               "srtf"}
+    # a genuinely different class under a taken name still raises
+    with pytest.raises(ValueError, match="duplicate"):
+        @DISPATCH_REGISTRY.register("hash")
+        class Impostor:
+            pass
+
+
+def test_history_predictor_min_obs_zero_is_safe():
+    """'history:warmup=0' must fall back to cold start on a never-seen
+    function, not KeyError (min_obs clamps to 1)."""
+    from repro.core.predict import make_predictor
+    for spec in ("history:warmup=0", "class:warmup=0",
+                 "history:warmup=0,mode=median"):
+        p = make_predictor(spec)
+        assert p.predict(42) is None         # nothing observed at all
+        p.observe(1, 2.0)
+        p.predict(42)                        # cold start, no crash
+
+
+def test_legacy_factories_are_registry_backed():
+    from repro.core.dispatch import POLICIES, SFSAwareDispatch, make_dispatch
+    from repro.core.predict import PREDICTORS, ClassEta, make_predictor
+    from repro.serving.schedulers import SFSScheduler, make_scheduler
+    assert POLICIES == DISPATCH_REGISTRY.names()
+    assert PREDICTORS == PREDICTOR_REGISTRY.names()
+    d = make_dispatch("sfs-aware:O=5", [])
+    assert isinstance(d, SFSAwareDispatch) and d.overload_factor == 5
+    p = make_predictor("class:margin=1.5,boundary=0.75")
+    assert isinstance(p, ClassEta)
+    assert p.safety_margin == 1.5 and p.boundary_quantile == 0.75
+    s = make_scheduler("sfs:O=4,N=50,init=16", 2)
+    assert isinstance(s, SFSScheduler)
+    assert s.overload_factor == 4 and s.window == 50 and s.S == 16
+
+
+# ---------------------------------------------------------------------------
+# Spec grammar: parse(str(spec)) == spec, property-based
+# ---------------------------------------------------------------------------
+
+# alphabet chosen so no generated string coerces to another literal
+# type ("true"/"nan"/"inf"/"none"/... are unspellable) — a string value
+# that *looks* like a number or bool cannot round-trip through the
+# grammar, by design (it parses back as that type)
+_ident = st.text(alphabet="bcdegh_", min_size=1, max_size=8)
+_value = st.one_of(
+    st.integers(-10_000, 10_000),
+    st.floats(-1e6, 1e6, allow_nan=False, allow_infinity=False),
+    st.booleans(),
+    st.none(),
+    _ident,
+)
+
+
+def _spec_strategy(cls, names):
+    # keys drawn from canonical knobs AND free-form identifiers — the
+    # grammar round-trips regardless of knob validity (validation
+    # happens at build/convert time)
+    keys = st.one_of(st.sampled_from(sorted(set(cls.ALIASES.values()))
+                                     or ["x"]), _ident)
+    return st.builds(
+        cls,
+        name=st.sampled_from(names),
+        args=st.dictionaries(keys, _value, max_size=4).map(
+            lambda d: tuple(d.items())))
+
+
+@settings(max_examples=120, deadline=None)
+@given(spec=st.one_of(
+    _spec_strategy(SchedulerSpec, list(SCHEDULER_REGISTRY.names())
+                   + list(DES_POLICIES)),
+    _spec_strategy(DispatchSpec, list(DISPATCH_REGISTRY.names())),
+    _spec_strategy(PredictorSpec, list(PREDICTOR_REGISTRY.names()))))
+def test_spec_string_round_trip(spec):
+    assert type(spec).parse(str(spec)) == spec
+
+
+def test_aliases_normalize_to_canonical():
+    assert DispatchSpec.parse("sfs-aware:O=3,N=100") == DispatchSpec(
+        "sfs-aware", (("overload_factor", 3), ("adaptive_window", 100)))
+    assert PredictorSpec.parse("history:warmup=2") == PredictorSpec(
+        "history", (("min_obs", 2),))
+    # arg order is canonicalized, so permutations compare equal
+    assert SchedulerSpec.parse("sfs:N=50,O=4") == \
+        SchedulerSpec.parse("sfs:O=4,N=50")
+
+
+def test_non_round_trippable_string_values_rejected_at_construction():
+    """The grammar is unquoted, so string values that reparse as other
+    literals (or contain separators) are rejected up front — keeping
+    parse(str(spec)) == spec an invariant, not a convention."""
+    with pytest.raises(ValueError, match="round-trip"):
+        PredictorSpec("history", (("mode", "true"),))
+    with pytest.raises(ValueError, match="round-trip"):
+        PredictorSpec("history", (("mode", "5"),))
+    with pytest.raises(ValueError, match="separators"):
+        PredictorSpec("history", (("mode", "a,b"),))
+    with pytest.raises(ValueError, match="separators"):
+        SchedulerSpec("sfs", (("bad key", 1),))
+
+
+def test_malformed_and_unknown_specs_raise():
+    with pytest.raises(ValueError, match="key=value"):
+        DispatchSpec.parse("hash:oops")
+    with pytest.raises(ValueError, match="unknown dispatch"):
+        DispatchSpec.parse("nope").build([])
+    with pytest.raises(ValueError, match="unknown scheduler knob"):
+        ServerSpec(scheduler="sfs:bogus_knob=1").to_sim_config()
+    with pytest.raises(ValueError, match="not a DES policy"):
+        ServerSpec(scheduler="bogus").to_sim_config()
+
+
+# ---------------------------------------------------------------------------
+# Legacy-config converters: lossless and bit-exact
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(policy=st.sampled_from(DES_POLICIES),
+       cores=st.integers(1, 64),
+       window=st.integers(1, 500),
+       hinted=st.booleans(),
+       slice_init=st.floats(0.001, 10.0, allow_nan=False))
+def test_sim_config_spec_round_trip(policy, cores, window, hinted,
+                                    slice_init):
+    cfg = SimConfig(cores=cores, policy=policy, adaptive_window=window,
+                    hinted_demotion=hinted, slice_init_s=slice_init)
+    assert cfg.to_spec().to_sim_config() == cfg
+
+
+def test_engine_config_spec_round_trip():
+    from repro.serving.engine import EngineConfig
+    ecfg = EngineConfig(lanes=6, n_slots=48, max_len=512, policy="sfs",
+                        sched_kw={"slice_ticks": 8, "overload_factor": 2.0})
+    assert ecfg.to_spec().to_engine_config() == ecfg
+
+
+def test_cluster_config_to_spec_matches_direct_cluster():
+    """Tick converter: ClusterConfig.to_spec(engine specs) reproduces a
+    hand-built Cluster run exactly."""
+    from repro.serving import Cluster, ClusterConfig, Engine, EngineConfig
+    wl = TickWorkloadSpec(n=200, load=1.0, seed=9)
+    ecfgs = [EngineConfig(lanes=2, n_slots=32, policy="sfs")
+             for _ in range(2)]
+    cfg = ClusterConfig(policy="sfs-aware")
+    direct = Cluster([Engine(dataclasses.replace(e)) for e in ecfgs],
+                     cfg).run(wl.generate(4), max_ticks=2_000_000)
+    spec = cfg.to_spec([e.to_spec() for e in ecfgs])
+    res = run_experiment(dataclasses.replace(spec, workload=wl))
+    assert res.finish.tolist() == [r.finish for r in direct]
+    assert res.n_ctx.tolist() == [r.n_ctx for r in direct]
+
+
+def _fingerprint(stats):
+    return [(s.rid, s.finish, s.n_ctx, s.demoted) for s in stats]
+
+
+@pytest.mark.parametrize("dispatch", ["hash", "sfs-aware"])
+def test_spec_path_matches_legacy_cluster_sim_bit_exact(dispatch):
+    """The golden satellite: spec-built oracle runs == legacy
+    ClusterSimConfig runs, bit for bit (PR 2 golden equivalence)."""
+    wl = FaaSBenchConfig(n_requests=800, cores=16, load=1.0, seed=17)
+    cfg = ClusterSimConfig(n_servers=4, dispatch=dispatch,
+                           predictor="oracle",
+                           server=SimConfig(cores=4, policy="sfs"))
+    legacy = simulate_cluster(generate(wl), cfg)
+    res = run_experiment(cfg.to_spec(workload=wl))
+    got = list(zip(res.rids.tolist(), res.finish.tolist(),
+                   res.n_ctx.tolist(), res.demoted.tolist()))
+    assert got == _fingerprint(legacy.merged.stats)
+    assert res.dispatch_counts == list(legacy.dispatch_counts)
+
+
+def test_homogeneous_servers_list_matches_replicated_server():
+    """ClusterSimConfig.servers=[cfg]*n is the same cluster as
+    n_servers=n + server=cfg."""
+    reqs = generate(FaaSBenchConfig(n_requests=500, cores=8, load=1.0,
+                                    seed=5))
+    base = SimConfig(cores=4, policy="sfs")
+    a = simulate_cluster(reqs, ClusterSimConfig(
+        n_servers=2, dispatch="least-outstanding", server=base))
+    b = simulate_cluster(reqs, ClusterSimConfig(
+        dispatch="least-outstanding",
+        servers=[dataclasses.replace(base) for _ in range(2)]))
+    assert _fingerprint(a.merged.stats) == _fingerprint(b.merged.stats)
+
+
+def test_dispatch_spec_args_override_legacy_knobs():
+    from repro.core.simulator import ClusterSimulator
+    sim = ClusterSimulator([], ClusterSimConfig(
+        n_servers=2, dispatch="sfs-aware:O=7,init=0.5",
+        server=SimConfig(cores=2, policy="sfs"),
+        overload_factor=3.0, slice_init_s=0.1))
+    assert sim.policy.overload_factor == 7
+    assert sim.policy.S == 0.5
+    assert sim.policy.window == 100          # legacy default still fills in
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous clusters, end to end in both engines
+# ---------------------------------------------------------------------------
+
+HETERO = (ServerSpec(cores=6), ServerSpec(cores=6),
+          ServerSpec(cores=2, scheduler="cfs"),
+          ServerSpec(cores=2, scheduler="cfs"))
+
+
+def test_heterogeneous_des_runs_end_to_end():
+    spec = ExperimentSpec(
+        engine="des", servers=HETERO, dispatch="sfs-aware",
+        workload=FaaSBenchConfig(n_requests=600, cores=16, load=1.0,
+                                 seed=3))
+    res = run_experiment(spec)
+    assert res.n == 600
+    assert res.rids.tolist() == list(range(600))
+    assert sum(res.dispatch_counts) == 600
+    assert len(res.raw.per_server) == len(HETERO)
+    assert sum(len(r.stats) for r in res.raw.per_server) == 600
+
+
+def test_heterogeneous_tick_runs_end_to_end():
+    spec = ExperimentSpec(
+        engine="tick", servers=HETERO, dispatch="sfs-aware",
+        workload=TickWorkloadSpec(n=300, load=0.9, seed=7))
+    res = run_experiment(spec)
+    assert res.n == 300
+    assert res.rids.tolist() == list(range(300))
+    assert sum(res.dispatch_counts) == 300
+    assert res.unit == "t"
+
+
+def test_sfs_aware_exploits_filter_rich_servers_des():
+    """In the mixed pool, sfs-aware routes the short-bucket mass to the
+    FILTER-rich (sfs) servers and beats shape-blind hash on short P99."""
+    wl = FaaSBenchConfig(n_requests=1500, cores=16, load=1.0, seed=11)
+    out = {}
+    for dispatch in ("hash", "sfs-aware"):
+        res = run_experiment(ExperimentSpec(
+            engine="des", servers=HETERO, dispatch=dispatch, workload=wl))
+        out[dispatch] = res
+    short = "<0.1s"
+    assert (out["sfs-aware"].buckets()[short]["p99"]
+            <= out["hash"].buckets()[short]["p99"])
+    # shorts concentrate on the two big sfs servers under sfs-aware
+    sfs_share = sum(out["sfs-aware"].dispatch_counts[:2])
+    assert sfs_share > 0.6 * sum(out["sfs-aware"].dispatch_counts)
+
+
+def test_experiment_spec_validation():
+    with pytest.raises(ValueError, match="engine"):
+        ExperimentSpec(engine="quantum")
+    with pytest.raises(ValueError, match="at least one server"):
+        ExperimentSpec(servers=())
+    with pytest.raises(ValueError, match="DES-only"):
+        ExperimentSpec(engine="tick", dispatch_latency=0.5)
+    with pytest.raises(ValueError, match="FaaSBenchConfig"):
+        run_experiment(ExperimentSpec(engine="des", workload=None))
+
+
+def test_run_experiment_unified_result_schema():
+    res = run_experiment(ExperimentSpec(
+        engine="des", servers=(ServerSpec(cores=4),),
+        dispatch="hash", predictor="history:warmup=2",
+        workload=FaaSBenchConfig(n_requests=200, cores=4, load=0.8,
+                                 seed=1)))
+    assert res.predictor == "history"
+    assert len(res.service) == len(res.turnaround) == len(res.rte) == 200
+    assert res.buckets()            # unit-matched edges resolve
+    assert len(res.fingerprint()) == 64
+    assert res.summary()["servers"] == 1
+    # top-level package API
+    assert repro.run_experiment is run_experiment
+    assert isinstance(repro.ExperimentSpec(), ExperimentSpec)
