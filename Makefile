@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-smoke bench-predict bench
+.PHONY: test test-fast bench-smoke bench-predict bench bench-json \
+  bench-gate
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -12,7 +13,7 @@ test:
 test-fast:
 	$(PY) -m pytest -q tests/test_simulator.py tests/test_workload.py \
 	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py \
-	  tests/test_predict.py tests/test_spec.py
+	  tests/test_predict.py tests/test_spec.py tests/test_vector_cluster.py
 
 # <60 s cluster-dispatch smoke check (asserts the short-P99 headline)
 bench-smoke:
@@ -22,6 +23,15 @@ bench-smoke:
 # short P99 and the oracle == hinted=True bit-exact back-compat)
 bench-predict:
 	$(PY) benchmarks/predict_sweep.py --smoke
+
+# CI perf trajectory: smoke cluster+predict suites with machine-readable
+# BENCH_*.json output (uploaded as artifacts), then the regression gate
+# against benchmarks/baselines/
+bench-json:
+	$(PY) -m benchmarks.run --smoke --json cluster predict
+
+bench-gate:
+	$(PY) benchmarks/check_regression.py
 
 # full benchmark suite (paper figures + cluster sweep)
 bench:

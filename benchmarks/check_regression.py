@@ -1,0 +1,140 @@
+"""Perf-regression gate: compare BENCH_*.json against checked-in baselines.
+
+CI runs the smoke benchmarks with ``--json`` (``benchmarks/run.py``),
+which emits one ``BENCH_<suite>.json`` per suite, then calls this gate:
+
+  PYTHONPATH=src python benchmarks/check_regression.py [BENCH_*.json ...]
+
+Each result file is matched row-by-row against
+``benchmarks/baselines/BENCH_<suite>.json`` on the row's identity keys
+(scenario/policy/load/..., everything except the metrics).  The build
+fails when:
+
+* a baseline row is missing from the new results (a scenario was
+  silently dropped);
+* short-function P99 regresses beyond the tolerance band
+  (rel ``SHORT_P99_REL`` — the sweeps are seeded and deterministic, so
+  the band only absorbs tie-breaking noise, not hardware variance);
+* total wall-clock exceeds ``WALL_FACTOR`` x baseline (the hot-path
+  budget: a 1.5x slowdown of the vectorized sweeps is a perf bug even
+  when every P99 still passes).
+
+New rows absent from the baseline are reported but do not fail — they
+are how new scenarios land; re-pin with ``--update`` after reviewing:
+
+  PYTHONPATH=src python benchmarks/check_regression.py --update
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+
+SHORT_P99_REL = 0.05      # deterministic seeds: tight band
+LONG_P99_REL = 0.50       # long tail is backlog-shaped; report-only band
+# wall-clock is the one non-deterministic metric: 1.5x is the
+# same-machine budget; CI sets BENCH_WALL_FACTOR looser because hosted
+# runners are not the machine the baseline was pinned on
+WALL_FACTOR = float(os.environ.get("BENCH_WALL_FACTOR", "1.5"))
+
+
+def _abs_slack(row: dict) -> float:
+    """Unit-aware absolute slack on short_p99: tick-engine rows are
+    integer-tick quantized (+-half a tick); seconds-scale rows get a
+    band far below any headline margin."""
+    return 0.5 if row.get("layer") == "tick-engine" else 0.01
+
+
+def _key(row: dict) -> tuple:
+    return tuple(sorted((k, v) for k, v in row.items()
+                        if k not in ("short_p99", "long_p99", "wall_s")))
+
+
+def check_file(path: str) -> list:
+    """Compare one BENCH_<suite>.json against its baseline; returns a
+    list of failure strings (empty == pass)."""
+    name = os.path.basename(path)
+    base_path = os.path.join(BASELINE_DIR, name)
+    if not os.path.exists(base_path):
+        return [f"{name}: no baseline at {base_path} "
+                "(run with --update to pin one)"]
+    with open(path) as f:
+        new = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    new_rows = {_key(r): r for r in new["rows"]}
+    base_rows = {_key(r): r for r in base["rows"]}
+    fails = []
+    for key, b in base_rows.items():
+        r = new_rows.get(key)
+        ident = {k: v for k, v in key}
+        label = " ".join(f"{k}={ident[k]}" for k in sorted(ident))
+        if r is None:
+            fails.append(f"{name}: baseline row dropped: {label}")
+            continue
+        slack = _abs_slack(ident)
+        limit = b["short_p99"] * (1 + SHORT_P99_REL) + slack
+        if r["short_p99"] > limit:
+            fails.append(
+                f"{name}: short_p99 regression [{label}]: "
+                f"{r['short_p99']:.3f} > {b['short_p99']:.3f} "
+                f"(+{SHORT_P99_REL:.0%}+{slack})")
+        if r["long_p99"] > b["long_p99"] * (1 + LONG_P99_REL) + 1.0:
+            print(f"  note {name}: long_p99 drift [{label}]: "
+                  f"{r['long_p99']:.2f} vs baseline {b['long_p99']:.2f}")
+    for key in new_rows.keys() - base_rows.keys():
+        ident = dict(key)
+        print(f"  note {name}: new row not in baseline: "
+              + " ".join(f"{k}={v}" for k, v in sorted(ident.items())))
+    wall, base_wall = new["total_wall_s"], base["total_wall_s"]
+    if wall > base_wall * WALL_FACTOR:
+        fails.append(f"{name}: wall-clock regression: {wall:.1f}s > "
+                     f"{WALL_FACTOR}x baseline {base_wall:.1f}s")
+    print(f"{name}: {len(base_rows)} baseline rows checked, "
+          f"wall {wall:.1f}s vs baseline {base_wall:.1f}s "
+          f"-> {'FAIL' if fails else 'OK'}")
+    return fails
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    update = "--update" in argv
+    paths = [a for a in argv if not a.startswith("-")]
+    if not paths:
+        paths = sorted(p for p in os.listdir(".")
+                       if p.startswith("BENCH_") and p.endswith(".json"))
+    if not paths:
+        print("no BENCH_*.json found; run "
+              "`python -m benchmarks.run --smoke --json cluster predict` "
+              "first")
+        return 1
+    missing = []
+    if not update and os.path.isdir(BASELINE_DIR):
+        # every baselined suite must be present in this run — a suite
+        # that silently stops emitting JSON is itself a regression
+        have = {os.path.basename(p) for p in paths}
+        missing = [b for b in sorted(os.listdir(BASELINE_DIR))
+                   if b.startswith("BENCH_") and b not in have]
+    if update:
+        os.makedirs(BASELINE_DIR, exist_ok=True)
+        for p in paths:
+            dst = os.path.join(BASELINE_DIR, os.path.basename(p))
+            shutil.copy(p, dst)
+            print("pinned", dst)
+        return 0
+    failures = [f"baselined suite produced no results this run: {b}"
+                for b in missing]
+    for p in paths:
+        failures += check_file(p)
+    for f in failures:
+        print("FAIL:", f)
+    if not failures:
+        print(f"perf gate: all {len(paths)} suite(s) within tolerance")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,9 +18,17 @@ small fair-share-only CFS servers (2 lanes).  ``sfs-aware`` exploits the
 shape — shorts to the FILTER-rich servers, longs concentrated on the
 fair-share pool — where shape-blind ``hash`` cannot.
 
+A **fleet** scenario runs 64 engines x 4 lanes through the vectorized
+stepping backend (``engine="vector"``, docs/CLUSTER.md "Scaling past 8
+engines") — consolidation scale the per-object tick loop cannot reach
+inside the smoke budget — and checks that sfs-aware still protects
+short functions against hash and least-outstanding under the bimodal
+(Azure-shaped) workload at load >= 0.8.
+
 ``--smoke`` runs a <60 s configuration suitable as a CI check and
 verifies the headline cluster claims: sfs-aware short-function P99 <=
-hash at load >= 0.8, in the uniform sweep AND the mixed pool.
+hash at load >= 0.8, in the uniform sweep, the mixed pool AND the
+64-engine fleet.
 
 Usage:
   PYTHONPATH=src python benchmarks/cluster_sweep.py [--smoke] [--des]
@@ -61,13 +69,15 @@ MIXED_SERVERS = (ServerSpec(cores=6), ServerSpec(cores=6),
 
 
 def run_tick(policy: str, servers: tuple, load: float, *, n: int,
-             seed: int, scenario: str = "uniform") -> dict:
+             seed: int, scenario: str = "uniform",
+             backend: str = "tick") -> dict:
     spec = ExperimentSpec(
-        engine="tick", servers=servers, dispatch=policy,
+        engine=backend, servers=servers, dispatch=policy,
         workload=TickWorkloadSpec(n=n, load=load, seed=seed))
-    res = run_experiment(spec, max_ticks=20_000_000)
+    res = run_experiment(spec, max_ticks=50_000_000)
     return {
         "layer": "tick-engine", "scenario": scenario, "policy": policy,
+        "backend": backend,
         "engines": len(servers), "lanes": [s.cores for s in servers],
         "load": load, "n": res.n, "wall_s": res.wall_s,
         "dispatch_counts": res.dispatch_counts,
@@ -126,9 +136,11 @@ def main(argv=None):
     if args.smoke:
         engine_counts, loads = [4], [0.8, 1.0]
         n_tick, n_des, lanes = args.n or 1000, args.n or 2000, 4
+        n_fleet = args.n or 40_000
     else:
         engine_counts, loads = [2, 4, 8], [0.6, 0.8, 1.0]
         n_tick, n_des, lanes = args.n or 3000, args.n or 4000, 4
+        n_fleet = args.n or 64_000
 
     rows = []
     for m in engine_counts:
@@ -167,6 +179,22 @@ def main(argv=None):
                             scenario="mixed")
                 rows.append(r)
                 print_row(r, SHORT_LABEL_S)
+
+    # fleet scenario: 64 engines through the vectorized stepping backend
+    # (the object path pays O(engines) Python per tick plus O(engines)
+    # dispatch scans per arrival and cannot cover this grid in smoke
+    # time; the vector backend is bit-exact with it, pinned in
+    # tests/test_agreement.py)
+    fleet_servers = uniform_servers(64, lanes)
+    fleet_loads = [0.8, 1.0] if args.smoke else [0.6, 0.8, 1.0]
+    for load in fleet_loads:
+        print(f"tick-engine FLEET (vector backend): engines=64 "
+              f"lanes={lanes} load={load} n={n_fleet}")
+        for pol in ("sfs-aware", "hash", "least-outstanding"):
+            r = run_tick(pol, fleet_servers, load, n=n_fleet, seed=7,
+                         scenario="fleet64", backend="vector")
+            rows.append(r)
+            print_row(r, SHORT_LABEL)
 
     path = save("cluster_sweep", {"rows": rows})
     print("saved", path)

@@ -9,9 +9,17 @@ engine e2e + the roofline table (from dry-run artifacts, if present).
 Exit status is non-zero when any suite raises or returns a failing
 return code, so CI can catch benchmark regressions.  ``--smoke`` is
 passed through to suites that take CLI args (cluster, predict).
+
+``--json`` additionally distills each suite's artifact into a
+machine-readable ``BENCH_<suite>.json`` in the working directory
+(wall-clock + headline short/long P99 per scenario row) — the perf
+trajectory CI uploads as build artifacts and gates against the
+checked-in ``benchmarks/baselines/`` via ``check_regression.py``.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -19,6 +27,7 @@ from benchmarks import (cluster_sweep, fig1_duration_cdf, fig2_policies,
                         fig6_7_load_sweep, fig9_10_timeslice, fig11_io,
                         fig12_overload, predict_sweep, roofline,
                         serving_e2e, table2_overhead)
+from benchmarks.common import OUT_DIR
 
 SUITES = {
     "fig1": fig1_duration_cdf,
@@ -38,6 +47,45 @@ SUITES = {
 # suites whose main(argv) takes CLI flags (--smoke pass-through)
 ARGV_SUITES = {"cluster", "predict"}
 
+# --json distillation: suite -> (artifact name, row key fields).  "n"
+# is part of a row's identity: smoke and full runs sweep the same cells
+# at different request counts, and the gate must never compare (or pin)
+# one against the other silently.
+BENCH_JSON = {
+    "cluster": ("cluster_sweep", ("layer", "scenario", "backend", "policy",
+                                  "engines", "load", "n")),
+    "predict": ("predict_sweep", ("predictor", "dispatch", "load", "iat",
+                                  "hinted_demotion", "n")),
+}
+
+
+def write_bench_json(name: str, out_dir: str = ".") -> str:
+    """Distill a suite's saved artifact into BENCH_<name>.json: one flat
+    row per sweep cell (identity keys + short/long P99 + wall-clock),
+    stable enough to diff across commits and gate in CI."""
+    artifact, key_fields = BENCH_JSON[name]
+    with open(os.path.join(OUT_DIR, artifact + ".json")) as f:
+        data = json.load(f)
+    rows = []
+    for r in data["rows"]:
+        buckets = r["buckets"]
+        keys = list(buckets)
+        row = {k: r[k] for k in key_fields if k in r}
+        row["short_p99"] = buckets[keys[0]]["p99"]
+        row["long_p99"] = buckets[keys[-1]]["p99"]
+        row["wall_s"] = r["wall_s"]
+        rows.append(row)
+    payload = {
+        "suite": name,
+        "n_rows": len(rows),
+        "total_wall_s": round(sum(r["wall_s"] for r in rows), 3),
+        "rows": rows,
+    }
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
 
 def _run_suite(name: str, mod, flags: list) -> int:
     rc = mod.main(flags) if (flags and name in ARGV_SUITES) else mod.main()
@@ -49,6 +97,8 @@ def _run_suite(name: str, mod, flags: list) -> int:
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     flags = [a for a in argv if a.startswith("-")]
+    json_mode = "--json" in flags
+    flags = [f for f in flags if f != "--json"]
     names = [a for a in argv if not a.startswith("-")] or list(SUITES)
     if "-h" in flags or "--help" in flags:
         print(__doc__)
@@ -78,6 +128,8 @@ def main(argv=None) -> int:
         if rc not in (None, 0):
             print(f"  !! {name} exited {rc}")
             failures.append(name)
+        if json_mode and name in BENCH_JSON and name not in failures:
+            print("  bench json:", write_bench_json(name))
         print(f"  ({time.time() - t0:.1f}s)")
     if failures:
         print(f"\n{len(failures)}/{len(names)} suite(s) failed: "

@@ -40,6 +40,8 @@ import hashlib
 from collections import deque
 from typing import Optional, Sequence
 
+import numpy as np
+
 from repro.core.spec import DISPATCH_REGISTRY, DispatchSpec
 
 
@@ -74,12 +76,76 @@ class ServerView:
         raise NotImplementedError
 
 
+class ServerStateColumns:
+    """Batched ServerView: the per-server state as columns over the whole
+    cluster, refreshed lazily from the views.
+
+    At fleet scale the per-arrival Python ``min(..., key=...)`` scans over
+    M views dominate routing cost (M method calls and tuple allocations
+    per arrival).  Owners that keep server state in arrays (the vector
+    cluster backend) bind one of these to ``policy.columns``; policies
+    then route via numpy ordering ops with **identical tie-breaking**
+    (np.lexsort/argmin are stable, so full-key ties fall back to the
+    server index, exactly like the tuple keys).
+
+    The owner marks servers dirty as their state changes — ``mark(idx)``
+    after a delivery, ``mark_all()`` after a cluster step — and
+    ``refresh()`` re-pulls only what changed.  Subclasses can override
+    ``_pull_all`` to bulk-load from backend arrays instead of per-view
+    method calls.
+    """
+
+    def __init__(self, views: Sequence["ServerView"]):
+        self.views = list(views)
+        n = len(self.views)
+        self.lanes = np.array([v.lanes for v in self.views], np.int64)
+        self.outstanding = np.zeros(n, np.int64)
+        self.filter_free = np.zeros(n, np.int64)
+        self.queue_len = np.zeros(n, np.int64)
+        self.fair_load = np.zeros(n, np.int64)
+        self.capacity = np.zeros(n, np.int64)
+        self._dirty: set = set()
+        self._all_dirty = True
+
+    def mark(self, idx: int):
+        self._dirty.add(idx)
+
+    def mark_all(self):
+        self._all_dirty = True
+
+    def _pull(self, i: int):
+        v = self.views[i]
+        self.outstanding[i] = v.outstanding()
+        self.filter_free[i] = v.filter_free()
+        self.queue_len[i] = v.queue_len()
+        self.fair_load[i] = v.fair_load()
+        self.capacity[i] = v.capacity()
+
+    def _pull_all(self):
+        for i in range(len(self.views)):
+            self._pull(i)
+
+    def refresh(self) -> "ServerStateColumns":
+        if self._all_dirty:
+            self._pull_all()
+            self._all_dirty = False
+            self._dirty.clear()
+        elif self._dirty:
+            for i in self._dirty:
+                self._pull(i)
+            self._dirty.clear()
+        return self
+
+
 class DispatchPolicy:
     name = "base"
 
     def __init__(self, views: Sequence[ServerView]):
         self.views = list(views)
         self.dispatch_counts = [0] * len(self.views)
+        # optional batched state (ServerStateColumns) bound by owners
+        # whose servers live in arrays; None = per-view Python path
+        self.columns: Optional[ServerStateColumns] = None
 
     def route(self, rid: int, eta: Optional[float],
               t: float) -> Optional[int]:
@@ -96,6 +162,10 @@ class DispatchPolicy:
         self.dispatch_counts[idx] += 1
 
     def _least_outstanding(self) -> int:
+        if self.columns is not None:
+            # np.argmin returns the first minimum: ties break on index,
+            # same as the tuple key below
+            return int(np.argmin(self.columns.refresh().outstanding))
         return min(range(len(self.views)),
                    key=lambda i: (self.views[i].outstanding(), i))
 
@@ -118,6 +188,9 @@ class HashDispatch(DispatchPolicy):
         b = _hash(rid, 2) % n
         if b == a:
             b = (a + 1) % n
+        if self.columns is not None:
+            out = self.columns.refresh().outstanding
+            return a if out[a] <= out[b] else b
         return a if (self.views[a].outstanding()
                      <= self.views[b].outstanding()) else b
 
@@ -149,6 +222,15 @@ class PullDispatch(DispatchPolicy):
 
     def next_puller(self) -> Optional[int]:
         n = len(self.views)
+        if self.columns is not None:
+            # first server with capacity at/after the scan start,
+            # wrapping — the same rotating scan, one vector op
+            idxs = np.nonzero(self.columns.refresh().capacity > 0)[0]
+            if idxs.size == 0:
+                return None
+            i = int(idxs[np.searchsorted(idxs, self._rr) % idxs.size])
+            self._rr = (i + 1) % n
+            return i
         for k in range(n):
             i = (self._rr + k) % n
             if self.views[i].capacity() > 0:
@@ -200,24 +282,36 @@ class SFSAwareDispatch(DispatchPolicy):
     def route(self, rid, eta, t):
         self._observe(t)
         short = eta is None or eta <= self.S
+        c = self.columns.refresh() if self.columns is not None else None
         if short:
             # idle FILTER lanes first; under saturation the FILTER queue
             # length is the wait a short request actually sees (longs by
             # then live in the fair-share pool), so prefer the shortest —
             # NOT least-outstanding, which undercounts work on servers
             # that concentrate long requests.
-            best = min(range(len(self.views)),
-                       key=lambda i: (-self.views[i].filter_free(),
-                                      self.views[i].queue_len(),
-                                      self.views[i].outstanding(), i))
-            v = self.views[best]
-            est_wait = v.queue_len() * self.S / max(v.lanes, 1)
-            if (v.filter_free() == 0
-                    and est_wait >= self.overload_factor * self.S):
+            if c is not None:
+                # lexsort is stable: primary key last, full-key ties
+                # fall back to server index — same order as the tuple
+                best = int(np.lexsort((c.outstanding, c.queue_len,
+                                       -c.filter_free))[0])
+                ff, ql = int(c.filter_free[best]), int(c.queue_len[best])
+                lanes = int(c.lanes[best])
+            else:
+                best = min(range(len(self.views)),
+                           key=lambda i: (-self.views[i].filter_free(),
+                                          self.views[i].queue_len(),
+                                          self.views[i].outstanding(), i))
+                v = self.views[best]
+                ff, ql, lanes = v.filter_free(), v.queue_len(), v.lanes
+            est_wait = ql * self.S / max(lanes, 1)
+            if ff == 0 and est_wait >= self.overload_factor * self.S:
                 self.overload_bypasses += 1
                 return self._least_outstanding()
             return best
         # long: fewest FILTER-bound requests = outstanding - fair pool
+        if c is not None:
+            return int(np.lexsort((c.outstanding,
+                                   c.outstanding - c.fair_load))[0])
         return min(range(len(self.views)),
                    key=lambda i: (self.views[i].outstanding()
                                   - self.views[i].fair_load(),

@@ -350,17 +350,73 @@ class ServerSpec:
     tick decode lanes).  ``slots`` (resident cache slots, default
     ``16 * cores``) and ``max_len`` (per-slot cache capacity) are
     tick-engine notions; the DES ignores them.
+
+    ``engine`` selects this server's *stepping backend* inside a
+    ``engine="vector"`` cluster experiment: ``"vector"`` demands the
+    struct-of-arrays group path (raising if the scheduler is not
+    vectorizable), ``"object"`` forces the per-object ``Engine``
+    fallback, and ``None`` (default) auto-selects — vector when
+    supported, object otherwise.  The DES and plain ``engine="tick"``
+    runs ignore it.
+
+    The spec has a terse one-line string form
+    (``"cores=6;scheduler=sfs:O=3;slots=96;engine=vector"``, non-default
+    fields only) with ``parse(str(spec)) == spec``.
     """
 
     cores: int = 4
     scheduler: SchedulerSpec = SchedulerSpec("sfs")
     slots: Optional[int] = None
     max_len: Optional[int] = None
+    engine: Optional[str] = None             # None (auto) | vector | object
 
     def __post_init__(self):
         if not isinstance(self.scheduler, SchedulerSpec):
             object.__setattr__(self, "scheduler",
                                SchedulerSpec.parse(self.scheduler))
+        if self.engine not in (None, "vector", "object"):
+            raise ValueError(f"unknown server engine {self.engine!r}; "
+                             "expected None, 'vector' or 'object'")
+
+    # -- string grammar (";"-separated so scheduler specs nest) ---------
+    def __str__(self) -> str:
+        parts = [f"cores={self.cores}"]
+        if self.scheduler != SchedulerSpec("sfs"):
+            parts.append(f"scheduler={self.scheduler}")
+        if self.slots is not None:
+            parts.append(f"slots={self.slots}")
+        if self.max_len is not None:
+            parts.append(f"max_len={self.max_len}")
+        if self.engine is not None:
+            parts.append(f"engine={self.engine}")
+        return ";".join(parts)
+
+    @classmethod
+    def parse(cls, spec) -> "ServerSpec":
+        """``"cores=6;scheduler=sfs:O=3;engine=vector"`` -> spec (the
+        converse of ``str``; unknown fields raise)."""
+        if isinstance(spec, cls):
+            return spec
+        kw: dict = {}
+        for part in str(spec).split(";"):
+            part = part.strip()
+            if not part:
+                continue
+            k, eq, v = part.partition("=")
+            if not eq:
+                raise ValueError(f"malformed server field {part!r} in "
+                                 f"{spec!r} (expected key=value)")
+            k, v = k.strip(), v.strip()
+            if k == "scheduler":
+                kw[k] = SchedulerSpec.parse(v)
+            elif k in ("cores", "slots", "max_len"):
+                kw[k] = int(v)
+            elif k == "engine":
+                kw[k] = v
+            else:
+                raise ValueError(f"unknown server field {k!r}; expected "
+                                 "cores/scheduler/slots/max_len/engine")
+        return cls(**kw)
 
     # -- converters (spec <-> legacy configs) ---------------------------
     def to_sim_config(self):
@@ -469,13 +525,19 @@ class ExperimentSpec:
     ``servers`` is a per-server list — mixed cores/lanes/slots/policies
     are first-class in both engines.  ``workload`` is a
     :class:`~repro.core.workload.FaaSBenchConfig` (DES), a
-    :class:`TickWorkloadSpec` (tick), or None when requests are passed to
-    :func:`run_experiment` directly.  ``dispatch_latency`` is the DES
-    router->server delay in seconds (the tick engine has no latency
-    model; it must stay 0 there).
+    :class:`TickWorkloadSpec` (tick/vector), or None when requests are
+    passed to :func:`run_experiment` directly.  ``dispatch_latency`` is
+    the DES router->server delay in seconds (the tick engine has no
+    latency model; it must stay 0 there).
+
+    ``engine="vector"`` runs tick semantics through the struct-of-arrays
+    stepping backend (:mod:`repro.serving.vector_cluster`): homogeneous
+    server groups advance as whole-group array ops, bit-exact with
+    ``engine="tick"``; per-server :attr:`ServerSpec.engine` knobs force
+    or forbid the object-engine fallback.
     """
 
-    engine: str = "des"                      # des | tick
+    engine: str = "des"                      # des | tick | vector
     servers: tuple = (ServerSpec(), ServerSpec(), ServerSpec(),
                       ServerSpec())
     dispatch: DispatchSpec = DispatchSpec("hash")
@@ -484,10 +546,11 @@ class ExperimentSpec:
     dispatch_latency: float = 0.0
 
     def __post_init__(self):
-        if self.engine not in ("des", "tick"):
+        if self.engine not in ("des", "tick", "vector"):
             raise ValueError(f"unknown engine {self.engine!r}; "
-                             "expected 'des' or 'tick'")
-        servers = tuple(self.servers)
+                             "expected 'des', 'tick' or 'vector'")
+        servers = tuple(ServerSpec.parse(s) if isinstance(s, str) else s
+                        for s in self.servers)
         if not servers:
             raise ValueError("ExperimentSpec needs at least one server")
         for s in servers:
@@ -500,7 +563,7 @@ class ExperimentSpec:
         if isinstance(self.predictor, (str, PredictorSpec)):
             object.__setattr__(self, "predictor",
                                PredictorSpec.parse(self.predictor))
-        if self.engine == "tick" and self.dispatch_latency:
+        if self.engine in ("tick", "vector") and self.dispatch_latency:
             raise ValueError("dispatch_latency is DES-only (the tick "
                              "engine has no network-delay model)")
 
@@ -615,6 +678,19 @@ def run_experiment(spec: ExperimentSpec, requests=None, *,
     return _run_tick(spec, requests, t0, max_ticks)
 
 
+def _build_tick_cluster(spec: ExperimentSpec):
+    """Stepping backend for a tick-semantics experiment: the per-object
+    ``Cluster`` (``engine="tick"``) or the struct-of-arrays
+    ``VectorCluster`` (``engine="vector"``, bit-exact with the former)."""
+    if spec.engine == "vector":
+        from repro.serving.vector_cluster import VectorCluster
+        return VectorCluster(spec.servers, spec.to_cluster_config())
+    from repro.serving.cluster import Cluster
+    from repro.serving.engine import Engine
+    engines = [Engine(s.to_engine_config()) for s in spec.servers]
+    return Cluster(engines, spec.to_cluster_config())
+
+
 def _run_des(spec: ExperimentSpec, requests, t0: float) -> ExperimentResult:
     from repro.core.simulator import ClusterSimulator
     from repro.core.workload import FaaSBenchConfig, generate
@@ -644,19 +720,16 @@ def _run_des(spec: ExperimentSpec, requests, t0: float) -> ExperimentResult:
 
 def _run_tick(spec: ExperimentSpec, requests, t0: float,
               max_ticks: int) -> ExperimentResult:
-    from repro.serving.cluster import Cluster
-    from repro.serving.engine import Engine
     if requests is None:
         if not isinstance(spec.workload, TickWorkloadSpec):
             raise ValueError(
                 "tick experiment needs a TickWorkloadSpec workload (or an "
                 f"explicit request list); got {spec.workload!r}")
         requests = spec.workload.generate(spec.total_cores)
-    engines = [Engine(s.to_engine_config()) for s in spec.servers]
-    cluster = Cluster(engines, spec.to_cluster_config())
+    cluster = _build_tick_cluster(spec)
     done = cluster.run(requests, max_ticks=max_ticks)
     return ExperimentResult(
-        spec=spec, engine="tick", unit="t",
+        spec=spec, engine=spec.engine, unit="t",
         rids=np.array([r.rid for r in done]),
         service=np.array([r.service_demand for r in done],
                          dtype=np.float64),

@@ -1,8 +1,10 @@
-from repro.serving.cluster import Cluster, ClusterConfig
+from repro.serving.cluster import Cluster, ClusterConfig, ClusterFrontend
 from repro.serving.engine import Engine, EngineConfig, summarize
 from repro.serving.request import Request
 from repro.serving.router import Router
 from repro.serving.schedulers import make_scheduler
+from repro.serving.vector_cluster import VectorCluster
 
-__all__ = ["Cluster", "ClusterConfig", "Engine", "EngineConfig", "Request",
-           "Router", "make_scheduler", "summarize"]
+__all__ = ["Cluster", "ClusterConfig", "ClusterFrontend", "Engine",
+           "EngineConfig", "Request", "Router", "VectorCluster",
+           "make_scheduler", "summarize"]

@@ -13,6 +13,12 @@ policy from :mod:`repro.core.dispatch` (``hash``, ``least-outstanding``,
 queue and engines with free capacity (an idle lane AND a free cache
 slot) pull work each tick — worker-initiated dispatch, per Hiku.
 
+The dispatch-side frontend (routing, hash batch semantics, the pull
+drain, ETA-hint propagation) lives in :class:`ClusterFrontend`, shared
+verbatim by the per-object ``Cluster`` here and the struct-of-arrays
+:class:`~repro.serving.vector_cluster.VectorCluster`, so the two
+stepping backends can be cross-validated bit for bit.
+
 The same policies drive the discrete-event multi-server simulator
 (``repro.core.simulator.simulate_cluster``), so tick-engine and DES
 results cross-validate policy-for-policy.
@@ -93,27 +99,48 @@ class ClusterConfig:
             predictor=self.predictor)
 
 
-class Cluster:
-    """N engines, one dispatch policy, lock-step ticks."""
+class ClusterFrontend:
+    """Level-3 dispatch frontend, independent of the stepping backend.
 
-    def __init__(self, engines: Sequence[Engine],
+    Owns the dispatch policy, the predictor, the central (pull) queue
+    and the per-tick routing semantics.  Backends plug in through five
+    hooks: ``_submit`` (deliver a routed request to server ``idx``),
+    ``_step`` (advance every server one tick), ``_active_counts``
+    (per-server running-request counts for the tick log),
+    ``_finished_count`` and ``_collect`` (result extraction).
+    """
+
+    def __init__(self, views: Sequence[ServerView],
                  cfg: Optional[ClusterConfig] = None):
-        self.engines = list(engines)
         self.cfg = cfg or ClusterConfig()
-        views = [EngineView(e) for e in self.engines]
+        self.n_servers = len(views)
         self.policy: DispatchPolicy = make_dispatch(
             resolve_dispatch(self.cfg.policy,
                              overload_factor=self.cfg.overload_factor,
                              adaptive_window=self.cfg.adaptive_window,
                              slice_init=self.cfg.slice_init), views)
         self.predictor = make_predictor(self.cfg.predictor)
-        for e in self.engines:
-            e.on_finish = self._observe_finish
         self.eta_log: dict[int, Optional[int]] = {}
         self.central_queue: deque[Request] = deque()
         self.t = 0
         # (t, central_qlen after pulls, tuple of per-engine active counts)
         self.tick_log: list[tuple[int, int, tuple]] = []
+
+    # -- backend hooks -------------------------------------------------
+    def _submit(self, idx: int, req: Request):
+        raise NotImplementedError
+
+    def _step(self):
+        raise NotImplementedError
+
+    def _active_counts(self) -> tuple:
+        raise NotImplementedError
+
+    def _finished_count(self) -> int:
+        raise NotImplementedError
+
+    def _collect(self) -> list:
+        raise NotImplementedError
 
     # ------------------------------------------------------------------
     def _observe_finish(self, req: Request, t: int):
@@ -142,7 +169,7 @@ class Cluster:
             # running in hinted_demotion mode can use it; an explicit
             # front-end hint is never overwritten
             req.eta_hint = eta
-        self.engines[idx].submit(req, getattr(req, "_prompt", None))
+        self._submit(idx, req)
 
     def tick(self, arrivals: Sequence[Request] = ()):
         """Dispatch this tick's arrivals, drain pulls, tick every engine."""
@@ -170,11 +197,9 @@ class Cluster:
                 if idx is None:
                     break
                 self._deliver(idx, self.central_queue.popleft())
-        for e in self.engines:
-            e.tick(())
+        self._step()
         self.tick_log.append(
-            (self.t, len(self.central_queue),
-             tuple(e.tick_log[-1][1] for e in self.engines)))
+            (self.t, len(self.central_queue), self._active_counts()))
         self.t += 1
 
     def run(self, workload: Sequence[Request], max_ticks: int = 1_000_000,
@@ -182,11 +207,11 @@ class Cluster:
         """Drive the cluster over a workload; returns requests rid-sorted."""
         workload = sorted(workload, key=lambda r: r.arrival)
         i, n = 0, len(workload)
-        while sum(len(e.finished) for e in self.engines) < n:
+        while self._finished_count() < n:
             if self.t > max_ticks:
                 raise RuntimeError(
                     f"cluster exceeded {max_ticks} ticks "
-                    f"({sum(len(e.finished) for e in self.engines)}/{n})")
+                    f"({self._finished_count()}/{n})")
             arrivals = []
             while i < n and workload[i].arrival <= self.t:
                 r = workload[i]
@@ -195,8 +220,7 @@ class Cluster:
                 arrivals.append(r)
                 i += 1
             self.tick(arrivals)
-        out = [r for e in self.engines for r in e.finished]
-        return sorted(out, key=lambda r: r.rid)
+        return sorted(self._collect(), key=lambda r: r.rid)
 
     # ------------------------------------------------------------------
     @property
@@ -207,9 +231,37 @@ class Cluster:
         return {
             "policy": self.policy.name,
             "predictor": self.predictor.name,
-            "engines": len(self.engines),
+            "engines": self.n_servers,
             "dispatch_counts": self.dispatch_counts,
             "overload_bypasses": getattr(self.policy, "overload_bypasses",
                                          0),
             "ticks": self.t,
         }
+
+
+class Cluster(ClusterFrontend):
+    """N per-object engines, one dispatch policy, lock-step ticks."""
+
+    def __init__(self, engines: Sequence[Engine],
+                 cfg: Optional[ClusterConfig] = None):
+        self.engines = list(engines)
+        super().__init__([EngineView(e) for e in self.engines], cfg)
+        for e in self.engines:
+            e.on_finish = self._observe_finish
+
+    # -- backend hooks -------------------------------------------------
+    def _submit(self, idx: int, req: Request):
+        self.engines[idx].submit(req, getattr(req, "_prompt", None))
+
+    def _step(self):
+        for e in self.engines:
+            e.tick(())
+
+    def _active_counts(self) -> tuple:
+        return tuple(e.tick_log[-1][1] for e in self.engines)
+
+    def _finished_count(self) -> int:
+        return sum(len(e.finished) for e in self.engines)
+
+    def _collect(self) -> list:
+        return [r for e in self.engines for r in e.finished]

@@ -58,6 +58,7 @@ class Engine:
         self.by_slot: dict[int, Request] = {}
         self.finished: list[Request] = []
         self.next_token: dict[int, int] = {}     # rid -> pending input token
+        self.n_stalled = 0                       # parked on a stall event
         self.lane_busy_ticks = 0
         self.tick_log: list[tuple[int, int, int]] = []  # (t, n_active, qlen)
         # completion callback (req, finish_tick): the cluster layer feeds
@@ -99,6 +100,8 @@ class Engine:
 
     def runnable_count(self) -> int:
         """Requests that could occupy a lane this tick (not stalled)."""
+        if self.n_stalled == 0:          # hot path: no per-request scan
+            return len(self.pending_slot) + len(self.by_slot)
         n = len(self.pending_slot)
         for r in self.by_slot.values():
             if r.stall_until < 0 or r.stall_until <= self.t:
@@ -156,11 +159,13 @@ class Engine:
             self.submit(req, getattr(req, "_prompt", None))
         self._admit_pending()
 
-        # wake stalled requests
-        for r in list(self.by_slot.values()):
-            if r.stall_until == t:
-                r.stall_until = -1
-                self.scheduler.on_wake(r.rid, t)
+        # wake stalled requests (skipped entirely while nothing is parked)
+        if self.n_stalled:
+            for r in list(self.by_slot.values()):
+                if r.stall_until == t:
+                    r.stall_until = -1
+                    self.n_stalled -= 1
+                    self.scheduler.on_wake(r.rid, t)
 
         chosen = self.scheduler.select(t)
         chosen_reqs = [self.scheduler.reqs[rid] for rid in chosen]
@@ -201,6 +206,7 @@ class Engine:
                 dur = r.stall_events[r.stall_idx][1]
                 r.stall_idx += 1
                 r.stall_until = t + 1 + dur
+                self.n_stalled += 1
                 self.scheduler.on_stall(r.rid, t)
         self.t += 1
 

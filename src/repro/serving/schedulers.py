@@ -22,8 +22,33 @@ from __future__ import annotations
 from collections import deque
 from typing import Optional
 
+import numpy as np
+
 from repro.core.spec import SCHEDULER_REGISTRY, SchedulerSpec
 from repro.serving.request import Request
+
+
+def pick_active_batched(eng: np.ndarray, key: np.ndarray, rid: np.ndarray,
+                        k: np.ndarray, n_engines: int):
+    """Batched ``select`` over struct-of-arrays candidates — the array
+    analogue of the sorted-order pick every preemptive scheduler here
+    performs, across a whole engine group at once (vector backend,
+    :mod:`repro.serving.vector_cluster`).
+
+    ``eng``/``key``/``rid`` are parallel arrays over all runnable
+    candidates of all engines in a group; ``k[g]`` is how many lanes
+    engine ``g`` has to offer.  Returns ``(order, chosen)``: ``order``
+    sorts candidates by ``(eng, key, rid)`` — exactly each engine's
+    ``sorted(runnable, key=(key, rid))`` concatenated in engine order —
+    and ``chosen`` marks, in that sorted frame, the first ``k[eng]``
+    candidates of each engine.
+    """
+    order = np.lexsort((rid, key, eng))
+    eng_s = eng[order]
+    counts = np.bincount(eng_s, minlength=n_engines)
+    starts = np.concatenate(([0], np.cumsum(counts[:-1])))
+    rank = np.arange(eng_s.size) - starts[eng_s]
+    return order, rank < k[eng_s]
 
 
 class Scheduler:
@@ -174,6 +199,11 @@ class CFSScheduler(Scheduler):
     def fair_load(self) -> int:
         return len(self.runnable)
 
+    # -- batched form (vector backend) ---------------------------------------
+    # fair share picks the k smallest (vruntime, rid) per engine; over
+    # arrays the key IS the vruntime column
+    pick_active = staticmethod(pick_active_batched)
+
 
 @SCHEDULER_REGISTRY.register("srtf")
 class SRTFScheduler(Scheduler):
@@ -219,6 +249,9 @@ class SRTFScheduler(Scheduler):
 
     def active_count(self) -> int:
         return min(self.lanes, len(self.runnable))
+
+    # batched form: same pick, keyed on remaining demand instead
+    pick_active = staticmethod(pick_active_batched)
 
 
 @SCHEDULER_REGISTRY.register("sfs")

@@ -1,0 +1,610 @@
+"""Vectorized cluster stepping — homogeneous engine groups as arrays.
+
+The per-object :class:`~repro.serving.cluster.Cluster` advances N
+engines in a lock-step Python loop: every tick pays N scheduler
+``select`` calls, N tick-log appends and O(active) per-request loops,
+which caps cluster sweeps at ~8 engines (ROADMAP).  This module
+re-implements the *stepping* — levels 2-1, the per-server FILTER/CFS
+machinery — as struct-of-arrays state over whole **homogeneous server
+groups**, advanced per tick with numpy array ops:
+
+* lane occupancy        ``filter_rids[G, lanes]`` (row order == the
+  object scheduler's ``filter_running`` list order)
+* fair-share pools      ``cfs_rows[G, cap]`` + ``pool_pos`` swap-remove
+* queue depths          per-engine deques mirrored in ``qlen[G]``
+* slice budgets /       per-request columns in :class:`_RequestStore`
+  remaining ticks       (``slice_left``, ``tokens_done``, ``vruntime``…)
+
+Level 3 (dispatch, predictor, the central pull queue) is untouched: the
+shared :class:`~repro.serving.cluster.ClusterFrontend` drives this
+backend through the same five hooks as the object cluster, and dispatch
+policies observe vector groups through :class:`VectorServerView` — the
+same ``ServerView`` protocol, now O(1) array reads.
+
+**Bit-exactness.**  The group step reproduces the object engines'
+per-tick semantics operation for operation (FILTER fill with the
+``O x S`` bypass, fair-share pick via the schedulers' batched
+``pick_active``, displaced-lane accounting, the monotone
+``min_vruntime`` recurrence, completion-ordered predictor feedback), so
+a ``VectorCluster`` run equals a ``Cluster`` run bit for bit — asserted
+across backends in ``tests/test_agreement.py``.  Heterogeneous
+stragglers (fifo/srtf schedulers, or servers pinned with
+``ServerSpec(engine="object")``) fall back to real ``Engine`` objects
+inside the same cluster.
+
+Not supported on the vector path (submit raises; pin the server to the
+object engine instead): stall events (§V-D parking) and real-model
+decoding — the vector backend is the synthetic scheduling mode only.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.dispatch import ServerStateColumns, ServerView
+from repro.core.spec import ServerSpec
+from repro.serving.cluster import ClusterConfig, ClusterFrontend, EngineView
+from repro.serving.engine import Engine
+from repro.serving.request import Request
+from repro.serving.schedulers import CFSScheduler
+
+# sched_kw the sfs group step implements; anything else -> object engine
+_SFS_KW = {"slice_ticks", "adaptive_window", "slice_init",
+           "overload_factor", "stall_aware", "hinted_demotion"}
+VECTOR_POLICIES = ("sfs", "cfs")
+
+
+def _grow(a: np.ndarray, cols: int, fill) -> np.ndarray:
+    pad = np.full(a.shape[:-1] + (cols - a.shape[-1],), fill, a.dtype)
+    return np.concatenate([a, pad], axis=-1)
+
+
+class _RequestStore:
+    """Per-request scheduling state, one column per field, shared by all
+    vector groups of a cluster.  Rows are append-ordered; finished rows
+    are written back into their ``Request`` objects at completion."""
+
+    def __init__(self):
+        self.n = 0
+        self.reqs: list[Request] = []
+        cap = 256
+        self.rid = np.empty(cap, np.int64)
+        self.n_tokens = np.empty(cap, np.int64)
+        self.tokens_done = np.zeros(cap, np.int64)
+        self.served = np.zeros(cap, np.int64)
+        self.prefill_done = np.zeros(cap, bool)
+        self.slice_left = np.zeros(cap, np.int64)
+        self.slice_set = np.zeros(cap, bool)
+        self.vruntime = np.zeros(cap, np.float64)
+        self.n_ctx = np.zeros(cap, np.int64)
+        self.demoted = np.zeros(cap, bool)
+        self.first_start = np.full(cap, -1, np.int64)
+        self.queue_enter = np.zeros(cap, np.int64)
+        self.queue_delay = np.zeros(cap, np.int64)
+        self.finish = np.full(cap, -1, np.int64)
+        self.in_filter = np.zeros(cap, bool)
+        self.in_cfs = np.zeros(cap, bool)
+        self.pool_pos = np.full(cap, -1, np.int64)
+        self.mark = np.zeros(cap, bool)          # reusable scratch mask
+
+    _ARRAYS = ("rid", "n_tokens", "tokens_done", "served", "prefill_done",
+               "slice_left", "slice_set", "vruntime", "n_ctx", "demoted",
+               "first_start", "queue_enter", "queue_delay", "finish",
+               "in_filter", "in_cfs", "pool_pos", "mark")
+
+    def add(self, req: Request) -> int:
+        if self.n == self.rid.size:
+            for name in self._ARRAYS:
+                a = getattr(self, name)
+                fill = (-1 if name in ("first_start", "finish", "pool_pos")
+                        else 0)
+                setattr(self, name, _grow(a, 2 * a.size, fill))
+        row = self.n
+        self.n += 1
+        self.reqs.append(req)
+        self.rid[row] = req.rid
+        self.n_tokens[row] = req.n_tokens
+        return row
+
+    def write_back(self, row: int):
+        """Materialize a finished row into its Request, matching every
+        field the object engine mutates."""
+        r = self.reqs[row]
+        r.tokens_done = int(self.tokens_done[row])
+        r.prefill_done = bool(self.prefill_done[row])
+        r.served_ticks = int(self.served[row])
+        r.n_ctx = int(self.n_ctx[row])
+        r.demoted = bool(self.demoted[row])
+        fs = int(self.first_start[row])
+        r.first_start = None if fs < 0 else fs
+        r.finish = int(self.finish[row])
+        r.queue_enter = int(self.queue_enter[row])
+        r.queue_delay = int(self.queue_delay[row])
+        r.vruntime = float(self.vruntime[row])
+        r.slice_left = (int(self.slice_left[row]) if self.slice_set[row]
+                        else None)
+        r.slot = None
+        return r
+
+
+class _VectorGroup:
+    """G identical engines stepped together as arrays."""
+
+    def __init__(self, members: Sequence[int], lanes: int, n_slots: int,
+                 policy: str, sched_kw: dict, store: _RequestStore):
+        self.members = list(members)          # global server indices
+        self.G = len(self.members)
+        self.lanes = lanes
+        self.n_slots = n_slots
+        self.policy = policy
+        self.store = store
+        G = self.G
+        # -- scheduler knobs (tick-native, as make_scheduler takes them)
+        self.fixed_slice = sched_kw.get("slice_ticks")
+        slice_init = sched_kw.get("slice_init", 32)
+        self.window = int(sched_kw.get("adaptive_window", 100))
+        of = sched_kw.get("overload_factor", 3.0)
+        self.overload_factor = None if of is None else float(of)
+        self.hinted_demotion = bool(sched_kw.get("hinted_demotion", False))
+        # -- per-engine state
+        init_S = (self.fixed_slice if self.fixed_slice is not None
+                  else slice_init)
+        self.S = np.full(G, init_S, np.int64)
+        self._iats = [deque(maxlen=self.window) for _ in range(G)]
+        self._last_arrival = np.full(G, -1, np.int64)
+        self._since_update = np.zeros(G, np.int64)
+        self.slice_timeline = [[(0, int(init_S))] for _ in range(G)]
+        self.overload_bypasses = np.zeros(G, np.int64)
+        self.filter_rids = np.full((G, lanes), -1, np.int64)
+        self.filter_count = np.zeros(G, np.int64)
+        cap = max(8, lanes)
+        self.cfs_rows = np.full((G, cap), -1, np.int64)
+        self.cfs_count = np.zeros(G, np.int64)
+        self.last_rows = np.full((G, lanes), -1, np.int64)
+        self.min_vruntime = np.zeros(G, np.float64)
+        self.queue = [deque() for _ in range(G)]
+        self.qlen = np.zeros(G, np.int64)
+        self.pending = [deque() for _ in range(G)]
+        self.pending_len = np.zeros(G, np.int64)
+        self.free_slots = np.full(G, n_slots, np.int64)
+        self.outstanding = np.zeros(G, np.int64)
+        self.lane_busy_ticks = np.zeros(G, np.int64)
+        self.n_active = np.zeros(G, np.int64)     # last tick's |chosen|
+
+    # -- fair-share pool plumbing --------------------------------------
+    def _cfs_add(self, j: int, row: int):
+        st = self.store
+        c = int(self.cfs_count[j])
+        if c == self.cfs_rows.shape[1]:
+            self.cfs_rows = _grow(self.cfs_rows, 2 * c, -1)
+        self.cfs_rows[j, c] = row
+        st.pool_pos[row] = c
+        st.in_cfs[row] = True
+        self.cfs_count[j] = c + 1
+
+    def _cfs_remove(self, j: int, row: int):
+        st = self.store
+        p = int(st.pool_pos[row])
+        last = int(self.cfs_count[j]) - 1
+        moved = self.cfs_rows[j, last]
+        self.cfs_rows[j, p] = moved
+        st.pool_pos[moved] = p
+        self.cfs_rows[j, last] = -1
+        st.pool_pos[row] = -1
+        st.in_cfs[row] = False
+        self.cfs_count[j] = last
+
+    # -- arrivals ------------------------------------------------------
+    def _observe_iat(self, j: int, t: int):
+        """SFS adaptive slice (paper §V-C), per engine, arrival-driven."""
+        if self.fixed_slice is not None:
+            return
+        if self._last_arrival[j] >= 0:
+            self._iats[j].append(t - int(self._last_arrival[j]))
+        self._last_arrival[j] = t
+        self._since_update[j] += 1
+        if (self._since_update[j] >= self.window
+                and len(self._iats[j]) == self.window):
+            mean_iat = sum(self._iats[j]) / len(self._iats[j])
+            self.S[j] = max(1, int(round(mean_iat * self.lanes)))
+            self._since_update[j] = 0
+            self.slice_timeline[j].append((t, int(self.S[j])))
+
+    def _on_arrival(self, j: int, row: int, t: int):
+        st = self.store
+        req = st.reqs[row]
+        if self.policy == "cfs":
+            st.queue_enter[row] = t
+            st.vruntime[row] = self.min_vruntime[j]
+            self._cfs_add(j, row)
+            return
+        self._observe_iat(j, t)
+        if (self.hinted_demotion and req.eta_hint is not None
+                and req.eta_hint > self.S[j]):
+            # predicted-long: skip FILTER straight to the fair-share pool
+            st.demoted[row] = True
+            st.queue_enter[row] = t
+            st.vruntime[row] = self.min_vruntime[j]
+            self._cfs_add(j, row)
+            return
+        st.queue_enter[row] = t
+        self.queue[j].append(row)
+        self.qlen[j] += 1
+
+    def submit(self, j: int, req: Request, t: int):
+        if req.stall_events:
+            raise ValueError(
+                "the vector backend does not model stall events; pin this "
+                "server to the object engine (ServerSpec(engine='object'))")
+        row = self.store.add(req)
+        self.outstanding[j] += 1
+        if self.free_slots[j] > 0:
+            self.free_slots[j] -= 1
+            self._on_arrival(j, row, t)
+        else:
+            self.pending[j].append(row)
+            self.pending_len[j] += 1
+
+    def _admit_pending(self, t: int):
+        for j in np.nonzero((self.pending_len > 0) & (self.free_slots > 0)
+                            )[0]:
+            pen = self.pending[j]
+            while self.free_slots[j] > 0 and pen:
+                self.free_slots[j] -= 1
+                self.pending_len[j] -= 1
+                self._on_arrival(j, pen.popleft(), t)
+
+    # -- the per-tick group step ---------------------------------------
+    def _fill_filter(self, t: int):
+        """FILTER lane fill from the global queue, per engine — the
+        object scheduler's pop loop, run only for engines that can
+        actually admit (free lane AND queued work)."""
+        st = self.store
+        L = self.lanes
+        for j in np.nonzero((self.filter_count < L) & (self.qlen > 0))[0]:
+            q = self.queue[j]
+            S = self.S[j]
+            while self.filter_count[j] < L and q:
+                row = q.popleft()
+                self.qlen[j] -= 1
+                delay = t - int(st.queue_enter[row])
+                st.queue_delay[row] += delay
+                if st.first_start[row] < 0:
+                    st.first_start[row] = t
+                # §V-E transient overload: bypass FILTER, go straight to CFS
+                if (self.overload_factor is not None
+                        and delay >= self.overload_factor * S):
+                    self.overload_bypasses[j] += 1
+                    st.demoted[row] = True
+                    st.vruntime[row] = self.min_vruntime[j]
+                    self._cfs_add(j, row)
+                    continue
+                if not st.slice_set[row] or st.slice_left[row] <= 0:
+                    st.slice_left[row] = S
+                    st.slice_set[row] = True
+                self.filter_rids[j, self.filter_count[j]] = row
+                self.filter_count[j] += 1
+                st.in_filter[row] = True
+
+    def _cfs_select(self, t: int, free: np.ndarray):
+        """Batched fair-share pick across the group (CFS semantics:
+        the ``free[g]`` smallest ``(vruntime, rid)`` per engine), plus
+        the start/displacement accounting ``select`` performs."""
+        st = self.store
+        G = self.G
+        sel = (free > 0) & (self.cfs_count > 0)
+        if not sel.any():
+            return (np.empty(0, np.int64),) * 3
+        eng, pos = np.nonzero(sel[:, None] & (self.cfs_rows >= 0))
+        rows = self.cfs_rows[eng, pos]
+        order, ch = CFSScheduler.pick_active(
+            eng, st.vruntime[rows], st.rid[rows], free, G)
+        chosen_rows = rows[order][ch]
+        chosen_eng = eng[order][ch]
+        # rank of each chosen request within its engine's pick (0-based)
+        k = np.bincount(chosen_eng, minlength=G)
+        starts = np.concatenate(([0], np.cumsum(k[:-1])))
+        chosen_rank = np.arange(chosen_rows.size) - starts[chosen_eng]
+        # first-start / queue-delay accounting for newly started work
+        new = st.first_start[chosen_rows] < 0
+        nrows = chosen_rows[new]
+        st.first_start[nrows] = t
+        st.queue_delay[nrows] += t - st.queue_enter[nrows]
+        # context-switch accounting: ran last pick, displaced this pick,
+        # still runnable (st.mark is persistent scratch — set, gather,
+        # clear by index, O(active) instead of O(store) per tick)
+        st.mark[chosen_rows] = True
+        le, lp = np.nonzero(sel[:, None] & (self.last_rows >= 0))
+        lrows = self.last_rows[le, lp]
+        disp = lrows[~st.mark[lrows] & st.in_cfs[lrows]]
+        st.n_ctx[disp] += 1
+        st.mark[chosen_rows] = False
+        # _last := chosen (only for engines whose select ran)
+        self.last_rows[sel] = -1
+        self.last_rows[chosen_eng, chosen_rank] = chosen_rows
+        return chosen_rows, chosen_eng, chosen_rank
+
+    def tick(self, t: int):
+        """Advance every engine in the group one tick.  Returns finish
+        events as ``(global_server_idx, within-engine order, Request)``
+        so the cluster can replay predictor feedback in exact
+        object-cluster order."""
+        st = self.store
+        G, L = self.G, self.lanes
+        self._admit_pending(t)
+        if self.policy == "sfs":
+            self._fill_filter(t)
+            free = L - self.filter_count
+            fe, fp = np.nonzero(self.filter_rids >= 0)
+            frows = self.filter_rids[fe, fp]
+        else:
+            free = np.full(G, L, np.int64)
+            fe = fp = frows = np.empty(0, np.int64)
+        chosen_rows, chosen_eng, chosen_rank = self._cfs_select(t, free)
+
+        self.n_active = self.filter_count + np.bincount(chosen_eng,
+                                                        minlength=G)
+        if frows.size == 0 and chosen_rows.size == 0:
+            return []                      # whole group idle this tick
+
+        # -- run: prefill on first touch, decode afterwards ------------
+        all_rows = np.concatenate([frows, chosen_rows])
+        pf = st.prefill_done[all_rows]
+        st.tokens_done[all_rows[pf]] += 1
+        st.prefill_done[all_rows[~pf]] = True
+        st.served[all_rows] += 1
+        self.lane_busy_ticks += self.n_active
+
+        events = []
+
+        # -- FILTER end-of-tick: finish / slice expiry -----------------
+        if frows.size:
+            st.slice_left[frows] -= 1
+            done_f = st.tokens_done[frows] >= st.n_tokens[frows]
+            exp_f = ~done_f & (st.slice_left[frows] <= 0)
+            fin_rows, fin_eng, fin_lane = (frows[done_f], fe[done_f],
+                                           fp[done_f])
+            if fin_rows.size:
+                st.finish[fin_rows] = t + 1
+                st.in_filter[fin_rows] = False
+                np.add.at(self.free_slots, fin_eng, 1)
+                np.add.at(self.outstanding, fin_eng, -1)
+                for g, lane, row in zip(fin_eng, fin_lane, fin_rows):
+                    events.append((self.members[g], int(lane),
+                                   st.write_back(int(row))))
+            drows = frows[exp_f]
+            if drows.size:                 # demote to the fair-share pool
+                deng = fe[exp_f]
+                st.in_filter[drows] = False
+                st.n_ctx[drows] += 1
+                st.demoted[drows] = True
+                st.vruntime[drows] = self.min_vruntime[deng]
+                for g, row in zip(deng, drows):
+                    self._cfs_add(int(g), int(row))
+            rem = done_f | exp_f
+            if rem.any():                  # stable lane compaction
+                self.filter_rids[fe[rem], fp[rem]] = -1
+                self.filter_rids = np.take_along_axis(
+                    self.filter_rids,
+                    np.argsort(self.filter_rids < 0, axis=1, kind="stable"),
+                    axis=1)
+                self.filter_count -= np.bincount(fe[rem], minlength=G)
+
+        # -- fair-share end-of-tick: charge, finish, min_vruntime ------
+        if chosen_rows.size:
+            st.vruntime[chosen_rows] += 1.0
+            done_c = st.tokens_done[chosen_rows] >= st.n_tokens[chosen_rows]
+            fin_rows = chosen_rows[done_c]
+            fin_eng = chosen_eng[done_c]
+            if fin_rows.size:
+                st.finish[fin_rows] = t + 1
+                np.add.at(self.free_slots, fin_eng, 1)
+                np.add.at(self.outstanding, fin_eng, -1)
+                for g, rk, row in zip(fin_eng, chosen_rank[done_c],
+                                      fin_rows):
+                    self._cfs_remove(int(g), int(row))
+                    events.append((self.members[g], L + int(rk),
+                                   st.write_back(int(row))))
+            # min_vruntime: the object recurrence max(m0, min_i) over the
+            # per-request updates is monotone, so it collapses to the min
+            # over the end state — the surviving pool plus, if the LAST
+            # pick of an engine finished, that request (it is discarded
+            # only after the final min is taken)
+            upd = np.nonzero(np.bincount(chosen_eng, minlength=G) > 0)[0]
+            pool = self.cfs_rows[upd]
+            pool_vr = np.where(pool >= 0,
+                               st.vruntime[np.maximum(pool, 0)], np.inf)
+            m = pool_vr.min(axis=1) if pool.shape[1] else \
+                np.full(upd.size, np.inf)
+            last_idx = np.searchsorted(chosen_eng, upd, side="right") - 1
+            last_fin = done_c[last_idx]
+            m = np.where(last_fin,
+                         np.minimum(m, st.vruntime[chosen_rows[last_idx]]),
+                         m)
+            self.min_vruntime[upd] = np.where(
+                np.isfinite(m),
+                np.maximum(self.min_vruntime[upd], m),
+                self.min_vruntime[upd])
+        return events
+
+
+class VectorServerView(ServerView):
+    """Dispatch-visible state of one engine inside a vector group —
+    the ``ServerView`` protocol as O(1) array reads."""
+
+    def __init__(self, group: _VectorGroup, j: int):
+        self.group = group
+        self.j = j
+
+    @property
+    def lanes(self) -> int:
+        return self.group.lanes
+
+    def outstanding(self) -> int:
+        return int(self.group.outstanding[self.j])
+
+    def filter_free(self) -> int:
+        g, j = self.group, self.j
+        if g.policy == "sfs":
+            active = int(g.filter_count[j])
+        else:
+            active = min(g.lanes, int(g.cfs_count[j]))
+        return max(0, g.lanes - active - self.queue_len())
+
+    def fair_load(self) -> int:
+        return int(self.group.cfs_count[self.j])
+
+    def queue_len(self) -> int:
+        return (int(self.group.qlen[self.j])
+                if self.group.policy == "sfs" else 0)
+
+    def capacity(self) -> int:
+        g, j = self.group, self.j
+        slots = int(g.free_slots[j]) - int(g.pending_len[j])
+        lanes = g.lanes - int(g.outstanding[j])   # no stalls on this path
+        return max(0, min(slots, lanes))
+
+
+class _VectorColumns(ServerStateColumns):
+    """Dispatch state columns bulk-loaded straight from group arrays —
+    a full refresh is a few fancy-index scatters per group instead of
+    5 x M Python method calls."""
+
+    def __init__(self, views, groups, stragglers):
+        super().__init__(views)
+        self._groups = [(g, np.asarray(g.members, np.int64))
+                        for g in groups]
+        self._stragglers = stragglers
+
+    def _pull_all(self):
+        for g, m in self._groups:
+            self.outstanding[m] = g.outstanding
+            self.fair_load[m] = g.cfs_count
+            if g.policy == "sfs":
+                self.queue_len[m] = g.qlen
+                self.filter_free[m] = np.maximum(
+                    0, g.lanes - g.filter_count - g.qlen)
+            else:
+                self.queue_len[m] = 0
+                self.filter_free[m] = np.maximum(
+                    0, g.lanes - np.minimum(g.lanes, g.cfs_count))
+            self.capacity[m] = np.maximum(
+                0, np.minimum(g.free_slots - g.pending_len,
+                              g.lanes - g.outstanding))
+        for i in self._stragglers:
+            self._pull(i)
+
+
+class VectorCluster(ClusterFrontend):
+    """N servers behind one dispatch policy; homogeneous groups step as
+    arrays, stragglers as per-object engines — same frontend, same
+    results, fleet-scale tick rate."""
+
+    def __init__(self, servers: Sequence, cfg: Optional[ClusterConfig]
+                 = None):
+        specs = [s if isinstance(s, ServerSpec) else ServerSpec.parse(s)
+                 for s in servers]
+        self.store = _RequestStore()
+        self.groups: list[_VectorGroup] = []
+        self.stragglers: dict[int, Engine] = {}  # straggler idx -> Engine
+        self._backend: list = [None] * len(specs)  # idx -> (group, j) | Engine
+        by_key: dict = {}
+        for i, s in enumerate(specs):
+            ec = s.to_engine_config()
+            ok = (ec.policy in VECTOR_POLICIES
+                  and (set(ec.sched_kw) <= _SFS_KW if ec.policy == "sfs"
+                       else not ec.sched_kw))
+            if s.engine == "vector" and not ok:
+                raise ValueError(
+                    f"server {i}: scheduler {ec.policy!r} with knobs "
+                    f"{ec.sched_kw!r} is not vectorizable; drop "
+                    "engine='vector' to fall back to the object engine")
+            if s.engine == "object" or not ok:
+                self.stragglers[i] = Engine(ec)
+                continue
+            key = (ec.lanes, ec.n_slots, ec.policy,
+                   tuple(sorted(ec.sched_kw.items())))
+            by_key.setdefault(key, []).append(i)
+        for (lanes, n_slots, policy, kw), members in by_key.items():
+            group = _VectorGroup(members, lanes, n_slots, policy,
+                                 dict(kw), self.store)
+            self.groups.append(group)
+            for j, idx in enumerate(members):
+                self._backend[idx] = (group, j)
+        views = []
+        for i in range(len(specs)):
+            b = self._backend[i]
+            views.append(EngineView(self.stragglers[i]) if b is None
+                         else VectorServerView(b[0], b[1]))
+        super().__init__(views, cfg)
+        self._cols = _VectorColumns(views, self.groups, self.stragglers)
+        self.policy.columns = self._cols
+        self._done: list[Request] = []
+        for idx, e in self.stragglers.items():
+            e.on_finish = self._make_straggler_callback(idx)
+        self._straggler_obs: list = []
+
+    def _make_straggler_callback(self, idx: int):
+        def cb(req: Request, t: int):
+            self._straggler_obs.append((idx, len(self._straggler_obs), req))
+        return cb
+
+    # -- backend hooks -------------------------------------------------
+    def _submit(self, idx: int, req: Request):
+        b = self._backend[idx]
+        if b is None:
+            self.stragglers[idx].submit(req, getattr(req, "_prompt", None))
+        else:
+            group, j = b
+            group.submit(j, req, self.t)
+        self._cols.mark(idx)
+
+    def _step(self):
+        events = []
+        self._straggler_obs = []
+        for idx, e in self.stragglers.items():
+            e.tick(())
+        events.extend(self._straggler_obs)
+        for group in self.groups:
+            events.extend(group.tick(self.t))
+        # replay completions in object-cluster order: server index
+        # ascending, then each engine's chosen order — so learned
+        # predictors see the exact same observation stream
+        events.sort(key=lambda ev: (ev[0], ev[1]))
+        for idx, _, req in events:
+            if self._backend[idx] is not None:
+                self._done.append(req)
+            self._observe_finish(req, self.t + 1)
+        self._cols.mark_all()
+
+    def _active_counts(self) -> tuple:
+        counts = [0] * self.n_servers
+        for idx, e in self.stragglers.items():
+            counts[idx] = e.tick_log[-1][1]
+        for group in self.groups:
+            for j, idx in enumerate(group.members):
+                counts[idx] = int(group.n_active[j])
+        return tuple(counts)
+
+    def _finished_count(self) -> int:
+        return len(self._done) + sum(len(e.finished)
+                                     for e in self.stragglers.values())
+
+    def _collect(self) -> list:
+        return self._done + [r for e in self.stragglers.values()
+                             for r in e.finished]
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        out = super().summary()
+        out["backend"] = "vector"
+        out["groups"] = [{"members": g.members, "lanes": g.lanes,
+                          "policy": g.policy} for g in self.groups]
+        out["stragglers"] = sorted(self.stragglers)
+        out["engine_overload_bypasses"] = int(
+            sum(int(g.overload_bypasses.sum()) for g in self.groups)
+            + sum(getattr(e.scheduler, "overload_bypasses", 0)
+                  for e in self.stragglers.values()))
+        return out

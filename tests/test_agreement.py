@@ -1,11 +1,16 @@
 """Scheduler/simulator agreement: the paper's headline claim — SFS
 improves short-function turnaround over CFS — must hold in BOTH
 execution models (tick-engine serving scheduler and discrete-event
-simulator), as a cross-layer regression test."""
+simulator), as a cross-layer regression test; and the vectorized
+cluster stepping backend must reproduce the object-engine cluster
+bit for bit on shared seeds."""
 import numpy as np
+import pytest
 
 from repro.core import FaaSBenchConfig, SimConfig, generate, simulate
 from repro.core.metrics import result_bucket_stats
+from repro.core.spec import (ExperimentSpec, ServerSpec, TickWorkloadSpec,
+                             run_experiment)
 from repro.serving import Engine, EngineConfig, Request
 
 SHORT_TICKS = 10          # tick-engine short bucket (tokens)
@@ -63,3 +68,101 @@ def test_sfs_improves_short_p99_in_des_bucket_stats():
     short = f"<{SHORT_S:g}s"
     assert out["sfs"][short]["p99"] < out["cfs"][short]["p99"]
     assert out["sfs"][short]["mean_rte"] > out["cfs"][short]["mean_rte"]
+
+
+# ---------------------------------------------------------------------------
+# Vector backend: bit-exact vs the object engines, cross-checked vs DES
+# ---------------------------------------------------------------------------
+
+
+def _full_fingerprint(reqs):
+    """Every per-request field the engines mutate — stricter than the
+    (rid, finish, n_ctx, demoted) golden currency."""
+    return [(r.rid, r.finish, r.served_ticks, r.n_ctx, r.demoted,
+             r.first_start, r.queue_delay, r.queue_enter, r.vruntime,
+             r.slice_left, r.tokens_done, r.prefill_done, r.slot)
+            for r in reqs]
+
+
+def _run_backend(engine, servers, dispatch, predictor, wl):
+    return run_experiment(ExperimentSpec(
+        engine=engine, servers=servers, dispatch=dispatch,
+        predictor=predictor, workload=wl), max_ticks=2_000_000)
+
+
+@pytest.mark.parametrize("n_engines", [1, 4, 8])
+@pytest.mark.parametrize("dispatch", ["hash", "least-outstanding", "pull",
+                                      "sfs-aware"])
+def test_vector_backend_bit_exact_vs_object(n_engines, dispatch):
+    """engine="vector" == engine="tick", field for field, on shared
+    seeds — including the learned-predictor feedback loop, whose
+    observation ORDER the vector backend must replay exactly."""
+    servers = tuple(ServerSpec(cores=4) for _ in range(n_engines))
+    wl = TickWorkloadSpec(n=250, load=1.0, seed=23)
+    obj = _run_backend("tick", servers, dispatch, "history", wl)
+    vec = _run_backend("vector", servers, dispatch, "history", wl)
+    assert _full_fingerprint(obj.raw) == _full_fingerprint(vec.raw)
+    assert obj.dispatch_counts == vec.dispatch_counts
+    assert obj.eta_log == vec.eta_log
+    assert obj.overload_bypasses == vec.overload_bypasses
+    assert obj.fingerprint() == vec.fingerprint()
+
+
+def test_vector_backend_bit_exact_on_mixed_pool():
+    """Heterogeneous spec: two sfs groups of different shapes plus cfs
+    servers — multiple vector groups in one cluster, still bit-exact."""
+    servers = (ServerSpec(cores=6), ServerSpec(cores=6),
+               ServerSpec(cores=4), ServerSpec(cores=2, scheduler="cfs"),
+               ServerSpec(cores=2, scheduler="cfs"))
+    wl = TickWorkloadSpec(n=400, load=1.0, seed=11)
+    obj = _run_backend("tick", servers, "sfs-aware", "oracle", wl)
+    vec = _run_backend("vector", servers, "sfs-aware", "oracle", wl)
+    assert _full_fingerprint(obj.raw) == _full_fingerprint(vec.raw)
+    assert obj.dispatch_counts == vec.dispatch_counts
+
+
+def test_vector_backend_matches_object_with_stragglers():
+    """A server pinned to engine="object" rides inside a vector cluster
+    and the whole run still equals the all-object cluster."""
+    servers = (ServerSpec(cores=4), ServerSpec(cores=4),
+               ServerSpec(cores=4, engine="object"),
+               ServerSpec(cores=4, scheduler="srtf"))   # srtf -> fallback
+    wl = TickWorkloadSpec(n=300, load=0.9, seed=3)
+    obj = _run_backend("tick", servers, "least-outstanding", "oracle", wl)
+    vec = _run_backend("vector", servers, "least-outstanding", "oracle", wl)
+    assert _full_fingerprint(obj.raw) == _full_fingerprint(vec.raw)
+
+
+def test_vector_and_des_agree_on_sfs_aware_headline():
+    """Three-way cross-validation on shared seeds: the cluster claim
+    (sfs-aware <= hash on short P99 under load) holds in the DES and in
+    BOTH tick stepping backends — and the two tick backends agree
+    exactly.  The DES leg pools seeds (7, 11) like the cluster sweep
+    does: single-seed p99 at n=2000 is tie-noise territory."""
+    seeds = (7, 11)
+    servers = tuple(ServerSpec(cores=4) for _ in range(4))
+    # tick semantics: vector vs object, and the headline itself
+    out = {}
+    for dispatch in ("hash", "sfs-aware"):
+        wl = TickWorkloadSpec(n=800, load=1.0, seed=seeds[0])
+        vec = _run_backend("vector", servers, dispatch, "oracle", wl)
+        obj = _run_backend("tick", servers, dispatch, "oracle", wl)
+        assert vec.fingerprint() == obj.fingerprint()
+        out[dispatch] = vec.buckets()
+    short_t = list(out["sfs-aware"])[0]
+    assert (out["sfs-aware"][short_t]["p99"]
+            <= out["hash"][short_t]["p99"] * 1.05)
+    # DES, same seeds, same shape, seed-pooled turnarounds
+    des = {}
+    for dispatch in ("hash", "sfs-aware"):
+        svc, ta = [], []
+        for seed in seeds:
+            res = run_experiment(ExperimentSpec(
+                engine="des", servers=servers, dispatch=dispatch,
+                workload=FaaSBenchConfig(n_requests=2000, cores=16,
+                                         load=1.0, seed=seed)))
+            svc.append(res.service)
+            ta.append(res.turnaround)
+        svc, ta = np.concatenate(svc), np.concatenate(ta)
+        des[dispatch] = float(np.percentile(ta[svc < SHORT_S], 99))
+    assert des["sfs-aware"] <= des["hash"] * 1.05

@@ -144,8 +144,19 @@ def test_history_median_mode():
 # ---------------------------------------------------------------------------
 
 
+def test_class_predictor_tuned_defaults():
+    """PR 3's swept knobs are the defaults (ROADMAP follow-up, promoted
+    after a non-smoke sweep across loads): margin=1, boundary=0.75."""
+    p = ClassEta()
+    assert p.safety_margin == 1.0
+    assert p.boundary_quantile == 0.75
+    assert p.short_quantile == 0.25 and p.long_quantile == 0.9
+
+
 def test_class_predictor_separates_and_margins():
-    p = ClassEta(safety_margin=2.0)
+    # pin the legacy boundary: this test's workload puts the decision
+    # boundary at the median, independent of the tuned default
+    p = ClassEta(safety_margin=2.0, boundary_quantile=0.5)
     assert p.predict("anything") is None         # cold: optimistic-short
     for _ in range(50):
         p.observe("short", 0.01)

@@ -142,6 +142,39 @@ def test_non_round_trippable_string_values_rejected_at_construction():
         SchedulerSpec("sfs", (("bad key", 1),))
 
 
+@pytest.mark.parametrize("spec", [
+    ServerSpec(),
+    ServerSpec(cores=6, scheduler="sfs:O=3,N=50", slots=96,
+               engine="vector"),
+    ServerSpec(cores=2, scheduler="cfs", engine="object"),
+    ServerSpec(cores=8, max_len=512),
+    ServerSpec(cores=1, scheduler="sfs:hinted_demotion=True"),
+])
+def test_server_spec_string_round_trip(spec):
+    """ServerSpec's one-line form round-trips, engine knob included."""
+    assert ServerSpec.parse(str(spec)) == spec
+
+
+def test_experiment_spec_accepts_server_spec_strings():
+    """The documented one-line ServerSpec grammar works at the primary
+    entry point, like dispatch/predictor strings do."""
+    spec = ExperimentSpec(engine="vector",
+                          servers=("cores=6;engine=vector",
+                                   ServerSpec(cores=2, scheduler="cfs")),
+                          dispatch="hash")
+    assert spec.servers[0] == ServerSpec(cores=6, engine="vector")
+    assert spec.total_cores == 8
+
+
+def test_server_spec_parse_rejects_unknowns():
+    with pytest.raises(ValueError, match="unknown server field"):
+        ServerSpec.parse("cores=4;bogus=1")
+    with pytest.raises(ValueError, match="key=value"):
+        ServerSpec.parse("cores")
+    with pytest.raises(ValueError, match="unknown server engine"):
+        ServerSpec.parse("cores=4;engine=warp")
+
+
 def test_malformed_and_unknown_specs_raise():
     with pytest.raises(ValueError, match="key=value"):
         DispatchSpec.parse("hash:oops")
