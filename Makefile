@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast bench-smoke bench-predict bench bench-json \
-  bench-gate
+.PHONY: test test-fast test-jax bench-smoke bench-predict bench-fleet \
+  bench bench-json bench-gate
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -13,7 +13,14 @@ test:
 test-fast:
 	$(PY) -m pytest -q tests/test_simulator.py tests/test_workload.py \
 	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py \
-	  tests/test_predict.py tests/test_spec.py tests/test_vector_cluster.py
+	  tests/test_predict.py tests/test_spec.py \
+	  tests/test_vector_cluster.py tests/test_jax_cluster.py
+
+# jax-backend agreement + edge suites, pinned to the CPU backend (what
+# CI runs across the python-version matrix)
+test-jax:
+	JAX_PLATFORMS=cpu $(PY) -m pytest -q tests/test_agreement.py \
+	  tests/test_jax_cluster.py
 
 # <60 s cluster-dispatch smoke check (asserts the short-P99 headline)
 bench-smoke:
@@ -24,11 +31,17 @@ bench-smoke:
 bench-predict:
 	$(PY) benchmarks/predict_sweep.py --smoke
 
+# <60 s 1024-engine jax-backend fleet scenario (own invocation so it
+# gets its own budget; 1M requests total across sfs-aware + hash)
+bench-fleet:
+	$(PY) benchmarks/cluster_sweep.py --fleet1024
+
 # CI perf trajectory: smoke cluster+predict suites with machine-readable
 # BENCH_*.json output (uploaded as artifacts), then the regression gate
-# against benchmarks/baselines/
+# against benchmarks/baselines/.  fleet1024 runs first so its artifact
+# is fresh when the cluster suite distills BENCH_cluster.json.
 bench-json:
-	$(PY) -m benchmarks.run --smoke --json cluster predict
+	$(PY) -m benchmarks.run --smoke --json fleet1024 cluster predict
 
 bench-gate:
 	$(PY) benchmarks/check_regression.py

@@ -53,11 +53,11 @@ def _key(row: dict) -> tuple:
                         if k not in ("short_p99", "long_p99", "wall_s")))
 
 
-def check_file(path: str) -> list:
+def check_file(path: str, baseline_dir: str = BASELINE_DIR) -> list:
     """Compare one BENCH_<suite>.json against its baseline; returns a
     list of failure strings (empty == pass)."""
     name = os.path.basename(path)
-    base_path = os.path.join(BASELINE_DIR, name)
+    base_path = os.path.join(baseline_dir, name)
     if not os.path.exists(base_path):
         return [f"{name}: no baseline at {base_path} "
                 "(run with --update to pin one)"]
@@ -67,6 +67,17 @@ def check_file(path: str) -> list:
         base = json.load(f)
     new_rows = {_key(r): r for r in new["rows"]}
     base_rows = {_key(r): r for r in base["rows"]}
+    matched = base_rows.keys() & new_rows.keys()
+    if not matched and base_rows and new_rows:
+        # zero overlap with both sides non-empty means the identity-key
+        # SCHEMA changed (a field was added/renamed), not that every
+        # scenario was dropped — fail once, loudly, instead of emitting
+        # one misleading "row dropped" failure per baseline row.
+        bf = sorted({k for key in base_rows for k, _ in key})
+        nf = sorted({k for key in new_rows for k, _ in key})
+        return [f"{name}: no baseline row matches any result row — "
+                f"identity-key schema changed? baseline fields {bf} "
+                f"vs new fields {nf}; re-pin with --update after review"]
     fails = []
     for key, b in base_rows.items():
         r = new_rows.get(key)
@@ -89,12 +100,20 @@ def check_file(path: str) -> list:
         ident = dict(key)
         print(f"  note {name}: new row not in baseline: "
               + " ".join(f"{k}={v}" for k, v in sorted(ident.items())))
-    wall, base_wall = new["total_wall_s"], base["total_wall_s"]
+    # wall-clock over MATCHED rows only: total_wall_s spans different
+    # row sets the moment a scenario is added or removed, so comparing
+    # totals either trips the 1.5x budget spuriously (new scenario) or
+    # masks a real slowdown (dropped scenario).
+    wall = sum(new_rows[k]["wall_s"] for k in matched)
+    base_wall = sum(base_rows[k]["wall_s"] for k in matched)
     if wall > base_wall * WALL_FACTOR:
-        fails.append(f"{name}: wall-clock regression: {wall:.1f}s > "
+        fails.append(f"{name}: wall-clock regression over "
+                     f"{len(matched)} matched rows: {wall:.1f}s > "
                      f"{WALL_FACTOR}x baseline {base_wall:.1f}s")
     print(f"{name}: {len(base_rows)} baseline rows checked, "
-          f"wall {wall:.1f}s vs baseline {base_wall:.1f}s "
+          f"matched wall {wall:.1f}s vs baseline {base_wall:.1f}s "
+          f"(totals {new['total_wall_s']:.1f}s vs "
+          f"{base['total_wall_s']:.1f}s) "
           f"-> {'FAIL' if fails else 'OK'}")
     return fails
 

@@ -39,23 +39,34 @@ SUITES = {
     "table2": table2_overhead,
     "serving": serving_e2e,
     "roofline": roofline,
-    "cluster": cluster_sweep,
+    "fleet1024": cluster_sweep,     # before "cluster": its artifact must
+    "cluster": cluster_sweep,       # be fresh when cluster distills
     "predict": predict_sweep,
 }
 
 
 # suites whose main(argv) takes CLI flags (--smoke pass-through)
-ARGV_SUITES = {"cluster", "predict"}
+ARGV_SUITES = {"cluster", "fleet1024", "predict"}
 
-# --json distillation: suite -> (artifact name, row key fields).  "n"
+# per-suite forced flags: "fleet1024" is cluster_sweep's standalone
+# 1024-engine jax-backend invocation (its own <60 s budget)
+SUITE_FLAGS = {"fleet1024": ["--fleet1024"]}
+
+# --json distillation: suite -> (artifact names, row key fields).  "n"
 # is part of a row's identity: smoke and full runs sweep the same cells
 # at different request counts, and the gate must never compare (or pin)
-# one against the other silently.
+# one against the other silently.  "cluster" distills from two
+# artifacts — the main sweep plus the standalone fleet1024 invocation —
+# so both land in the one gated BENCH_cluster.json; run the fleet1024
+# suite FIRST so its artifact is fresh when cluster distills (a missing
+# artifact is skipped here and surfaces as dropped baseline rows in the
+# gate).
 BENCH_JSON = {
-    "cluster": ("cluster_sweep", ("layer", "scenario", "backend", "policy",
-                                  "engines", "load", "n")),
-    "predict": ("predict_sweep", ("predictor", "dispatch", "load", "iat",
-                                  "hinted_demotion", "n")),
+    "cluster": (("cluster_sweep", "cluster_fleet1024"),
+                ("layer", "scenario", "backend", "policy",
+                 "engines", "load", "n")),
+    "predict": (("predict_sweep",), ("predictor", "dispatch", "load", "iat",
+                                     "hinted_demotion", "n")),
 }
 
 
@@ -63,18 +74,24 @@ def write_bench_json(name: str, out_dir: str = ".") -> str:
     """Distill a suite's saved artifact into BENCH_<name>.json: one flat
     row per sweep cell (identity keys + short/long P99 + wall-clock),
     stable enough to diff across commits and gate in CI."""
-    artifact, key_fields = BENCH_JSON[name]
-    with open(os.path.join(OUT_DIR, artifact + ".json")) as f:
-        data = json.load(f)
+    artifacts, key_fields = BENCH_JSON[name]
     rows = []
-    for r in data["rows"]:
-        buckets = r["buckets"]
-        keys = list(buckets)
-        row = {k: r[k] for k in key_fields if k in r}
-        row["short_p99"] = buckets[keys[0]]["p99"]
-        row["long_p99"] = buckets[keys[-1]]["p99"]
-        row["wall_s"] = r["wall_s"]
-        rows.append(row)
+    for artifact in artifacts:
+        path = os.path.join(OUT_DIR, artifact + ".json")
+        if not os.path.exists(path):
+            print(f"  note: artifact {artifact}.json not found, skipping "
+                  "(its baseline rows will show as dropped in the gate)")
+            continue
+        with open(path) as f:
+            data = json.load(f)
+        for r in data["rows"]:
+            buckets = r["buckets"]
+            keys = list(buckets)
+            row = {k: r[k] for k in key_fields if k in r}
+            row["short_p99"] = buckets[keys[0]]["p99"]
+            row["long_p99"] = buckets[keys[-1]]["p99"]
+            row["wall_s"] = r["wall_s"]
+            rows.append(row)
     payload = {
         "suite": name,
         "n_rows": len(rows),
@@ -88,7 +105,8 @@ def write_bench_json(name: str, out_dir: str = ".") -> str:
 
 
 def _run_suite(name: str, mod, flags: list) -> int:
-    rc = mod.main(flags) if (flags and name in ARGV_SUITES) else mod.main()
+    argv = SUITE_FLAGS.get(name, []) + (flags if name in ARGV_SUITES else [])
+    rc = mod.main(argv) if argv else mod.main()
     # some suites return their result dict (fig1) rather than an exit
     # code; only an int counts as a failing/passing status
     return rc if isinstance(rc, int) else 0

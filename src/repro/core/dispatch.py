@@ -44,6 +44,49 @@ import numpy as np
 
 from repro.core.spec import DISPATCH_REGISTRY, DispatchSpec
 
+# field width for packing lexicographic routing keys into one int64
+# argmin; per-server counters are bounded by requests in flight, so the
+# max-check guards only pathological configurations
+_PACK = 1 << 21
+
+
+class BoundedTimeline:
+    """Append-only ``(t, S)`` adaptive-slice trace with a hard length cap.
+
+    ``slice_timeline`` used to be a plain list growing one entry per
+    adaptive window forever — unbounded memory on million-request runs.
+    This keeps appends O(1) amortized and, when the cap is reached,
+    decimates in place: every second interior entry is dropped (the first
+    and the most recent survive), halving time resolution instead of
+    growing.  The Fig. 10 shape is preserved at any cap >= 4.
+    """
+
+    __slots__ = ("_data", "cap")
+
+    def __init__(self, *entries, cap: int = 4096):
+        self.cap = max(int(cap), 4)
+        self._data = list(entries)
+
+    def append(self, entry) -> None:
+        if len(self._data) >= self.cap:
+            self._data = self._data[:-1:2] + [self._data[-1]]
+        self._data.append(entry)
+
+    def __len__(self):
+        return len(self._data)
+
+    def __getitem__(self, i):
+        return self._data[i]
+
+    def __iter__(self):
+        return iter(self._data)
+
+    def __eq__(self, other):
+        return self._data == list(other)
+
+    def __repr__(self):
+        return f"BoundedTimeline({self._data!r}, cap={self.cap})"
+
 
 class ServerView:
     """Scheduling-state view of one server, as the dispatcher sees it.
@@ -106,6 +149,10 @@ class ServerStateColumns:
         self.capacity = np.zeros(n, np.int64)
         self._dirty: set = set()
         self._all_dirty = True
+        # what the last refresh() re-pulled: None = everything, a tuple
+        # of indices, or () for a no-op — lets policies keep derived
+        # per-server data (packed routing keys) incrementally current
+        self.last_changed: Optional[tuple] = None
 
     def mark(self, idx: int):
         self._dirty.add(idx)
@@ -130,10 +177,14 @@ class ServerStateColumns:
             self._pull_all()
             self._all_dirty = False
             self._dirty.clear()
+            self.last_changed = None
         elif self._dirty:
+            self.last_changed = tuple(self._dirty)
             for i in self._dirty:
                 self._pull(i)
             self._dirty.clear()
+        else:
+            self.last_changed = ()
         return self
 
 
@@ -264,8 +315,10 @@ class SFSAwareDispatch(DispatchPolicy):
         self._iats: deque = deque(maxlen=adaptive_window)
         self._last_arrival: Optional[float] = None
         self._since_update = 0
-        self.slice_timeline: list = [(0.0, self.S)]
+        self.slice_timeline = BoundedTimeline((0.0, self.S))
         self.overload_bypasses = 0
+        self._keys = None          # cached packed argmin keys
+        self._pack_ok = True
 
     def _observe(self, t: float):
         if self._last_arrival is not None:
@@ -279,6 +332,50 @@ class SFSAwareDispatch(DispatchPolicy):
             self._since_update = 0
             self.slice_timeline.append((t, self.S))
 
+    def _refresh_keys(self, c):
+        """Packed int64 routing keys over freshly-refreshed columns.
+
+        The lexicographic tuple mins become single ``np.argmin`` calls:
+        each field is bounded by requests in flight per server — far
+        below the 2^21 field width — and argmin's first-minimum rule
+        reproduces the stable lexsort's index tie-break exactly.  Keys
+        are rebuilt only for the rows ``columns.last_changed`` reports
+        (one delivery between consecutive arrivals is the common case),
+        so a route costs one argmin, not a lexsort, per arrival.
+        Returns None when a counter outgrew its field (pathological
+        config) — callers then fall back to np.lexsort.
+        """
+        ch = c.last_changed
+        if self._keys is None or ch is None:
+            self._pack_ok = bool(
+                c.queue_len.max(initial=0) < _PACK
+                and c.outstanding.max(initial=0) < _PACK
+                and c.filter_free.max(initial=0) < _PACK)
+            if not self._pack_ok:
+                self._keys = None
+                return None
+            self._keys = (
+                (-c.filter_free << 42) + (c.queue_len << 21)
+                + c.outstanding,
+                # (outstanding - fair_load) may touch 0; the int64
+                # multiply keeps the order exact either way
+                (c.outstanding - c.fair_load) * (1 << 21) + c.outstanding)
+        elif not self._pack_ok:
+            return None
+        else:
+            ks, kl = self._keys
+            for i in ch:
+                out = int(c.outstanding[i])
+                ql = int(c.queue_len[i])
+                ff = int(c.filter_free[i])
+                if out >= _PACK or ql >= _PACK or ff >= _PACK:
+                    self._pack_ok = False
+                    self._keys = None
+                    return None
+                ks[i] = (-ff << 42) + (ql << 21) + out
+                kl[i] = (out - int(c.fair_load[i])) * (1 << 21) + out
+        return self._keys
+
     def route(self, rid, eta, t):
         self._observe(t)
         short = eta is None or eta <= self.S
@@ -290,10 +387,12 @@ class SFSAwareDispatch(DispatchPolicy):
             # NOT least-outstanding, which undercounts work on servers
             # that concentrate long requests.
             if c is not None:
-                # lexsort is stable: primary key last, full-key ties
-                # fall back to server index — same order as the tuple
-                best = int(np.lexsort((c.outstanding, c.queue_len,
-                                       -c.filter_free))[0])
+                ks = self._refresh_keys(c)
+                if ks is not None:
+                    best = int(ks[0].argmin())
+                else:
+                    best = int(np.lexsort((c.outstanding, c.queue_len,
+                                           -c.filter_free))[0])
                 ff, ql = int(c.filter_free[best]), int(c.queue_len[best])
                 lanes = int(c.lanes[best])
             else:
@@ -310,6 +409,9 @@ class SFSAwareDispatch(DispatchPolicy):
             return best
         # long: fewest FILTER-bound requests = outstanding - fair pool
         if c is not None:
+            ks = self._refresh_keys(c)
+            if ks is not None:
+                return int(ks[1].argmin())
             return int(np.lexsort((c.outstanding,
                                    c.outstanding - c.fair_load))[0])
         return min(range(len(self.views)),

@@ -34,7 +34,8 @@ import math
 from collections import deque
 from typing import Optional
 
-from repro.core.dispatch import (PullDispatch, ServerView, make_dispatch,
+from repro.core.dispatch import (BoundedTimeline, PullDispatch, ServerView,
+                                 make_dispatch,
                                  route_hinted)
 from repro.core.predict import make_predictor
 from repro.core.spec import resolve_dispatch
@@ -199,7 +200,7 @@ class Simulator:
         self._iat_window: deque = deque(maxlen=cfg.adaptive_window)
         self._last_arrival: Optional[float] = None
         self._arrivals_since_update = 0
-        self.slice_timeline: list = [(0.0, self.S)]
+        self.slice_timeline = BoundedTimeline((0.0, self.S))
         self.srtf_wait: list = []        # heap (remaining, seq, job)
         # cluster-mode plumbing: per-rid ETA hints delivered alongside
         # inject(), and a completion callback (req, finish_time) through

@@ -374,9 +374,9 @@ class ServerSpec:
         if not isinstance(self.scheduler, SchedulerSpec):
             object.__setattr__(self, "scheduler",
                                SchedulerSpec.parse(self.scheduler))
-        if self.engine not in (None, "vector", "object"):
+        if self.engine not in (None, "vector", "object", "jax"):
             raise ValueError(f"unknown server engine {self.engine!r}; "
-                             "expected None, 'vector' or 'object'")
+                             "expected None, 'vector', 'object' or 'jax'")
 
     # -- string grammar (";"-separated so scheduler specs nest) ---------
     def __str__(self) -> str:
@@ -537,7 +537,7 @@ class ExperimentSpec:
     or forbid the object-engine fallback.
     """
 
-    engine: str = "des"                      # des | tick | vector
+    engine: str = "des"                      # des | tick | vector | jax
     servers: tuple = (ServerSpec(), ServerSpec(), ServerSpec(),
                       ServerSpec())
     dispatch: DispatchSpec = DispatchSpec("hash")
@@ -546,9 +546,9 @@ class ExperimentSpec:
     dispatch_latency: float = 0.0
 
     def __post_init__(self):
-        if self.engine not in ("des", "tick", "vector"):
+        if self.engine not in ("des", "tick", "vector", "jax"):
             raise ValueError(f"unknown engine {self.engine!r}; "
-                             "expected 'des', 'tick' or 'vector'")
+                             "expected 'des', 'tick', 'vector' or 'jax'")
         servers = tuple(ServerSpec.parse(s) if isinstance(s, str) else s
                         for s in self.servers)
         if not servers:
@@ -563,7 +563,7 @@ class ExperimentSpec:
         if isinstance(self.predictor, (str, PredictorSpec)):
             object.__setattr__(self, "predictor",
                                PredictorSpec.parse(self.predictor))
-        if self.engine in ("tick", "vector") and self.dispatch_latency:
+        if self.engine in ("tick", "vector", "jax") and self.dispatch_latency:
             raise ValueError("dispatch_latency is DES-only (the tick "
                              "engine has no network-delay model)")
 
@@ -685,6 +685,9 @@ def _build_tick_cluster(spec: ExperimentSpec):
     if spec.engine == "vector":
         from repro.serving.vector_cluster import VectorCluster
         return VectorCluster(spec.servers, spec.to_cluster_config())
+    if spec.engine == "jax":
+        from repro.serving.jax_cluster import JaxCluster
+        return JaxCluster(spec.servers, spec.to_cluster_config())
     from repro.serving.cluster import Cluster
     from repro.serving.engine import Engine
     engines = [Engine(s.to_engine_config()) for s in spec.servers]

@@ -183,6 +183,27 @@ class FaaSBenchConfig:
     spike_iat_s: float = 1e-3
 
 
+def _spike_windows(rng: np.random.Generator, n: int, n_spikes: int,
+                   spike_size: int) -> np.ndarray:
+    """Start indices of non-overlapping spike windows inside ``range(n)``.
+
+    Clamps the spike count/size to what fits (small smoke workloads used
+    to crash ``rng.choice`` here), and guarantees disjoint windows: draw
+    sorted distinct offsets from the index space with all window widths
+    removed, then re-inflate by one window width per preceding spike.
+    """
+    size = spike_size
+    if size <= 0 or n_spikes <= 0 or size > n:
+        return np.empty(0, dtype=int)
+    k = min(n_spikes, n // size)
+    while k > 0 and n - k * size + 1 < k:
+        k -= 1
+    if k == 0:
+        return np.empty(0, dtype=int)
+    offsets = np.sort(rng.choice(n - k * size + 1, size=k, replace=False))
+    return offsets + np.arange(k) * size
+
+
 def generate(cfg: FaaSBenchConfig) -> list[Request]:
     """Generate a reproducible FaaS workload."""
     rng = np.random.default_rng(cfg.seed)
@@ -202,30 +223,40 @@ def generate(cfg: FaaSBenchConfig) -> list[Request]:
     lam = cfg.load * cfg.cores / mean_service
     mean_iat = 1.0 / lam
 
+    spike_mask = np.zeros(n, dtype=bool)
     if cfg.iat == "poisson":
         iats = rng.exponential(mean_iat, size=n)
     elif cfg.iat == "uniform":
         iats = rng.uniform(0.0, 2.0 * mean_iat, size=n)
     elif cfg.iat == "trace":
-        # lognormal IATs (bursty) + a few dense spikes, normalized to the
-        # requested mean so the average load is preserved.
+        # lognormal IATs (bursty) + a few dense, disjoint spikes.  Spike
+        # IATs stay pinned at spike_iat_s through the exact-load rescale
+        # below — a spike whose density gets renormalized away is no
+        # longer a transient-overload spike (Fig. 12).
         mu = math.log(mean_iat) - 0.5 * cfg.trace_sigma ** 2
         iats = rng.lognormal(mu, cfg.trace_sigma, size=n)
-        spike_at = rng.choice(n - cfg.spike_size, size=cfg.n_spikes,
-                              replace=False)
-        for s in spike_at:
-            iats[s:s + cfg.spike_size] = cfg.spike_iat_s
-        iats *= mean_iat * n / iats.sum()
+        for s in _spike_windows(rng, n, cfg.n_spikes, cfg.spike_size):
+            spike_mask[s:s + cfg.spike_size] = True
+        iats[spike_mask] = cfg.spike_iat_s
     else:
         raise ValueError(f"unknown iat kind: {cfg.iat!r}")
 
     # exact-load normalization: scale IATs so busy/(span*cores) == load,
     # where span is the first-to-last-arrival window (what offered_load
     # measures) — the first IAT only offsets the start time, so it is
-    # excluded from the span budget.
+    # excluded from the span budget.  Spike IATs are held fixed and the
+    # remaining (non-spike) IATs absorb the whole rescale, unless the
+    # spikes alone exceed the span budget (degenerate config: fall back
+    # to scaling everything rather than emit a wrong total load).
     span_target = service.sum() / (cfg.load * cfg.cores)
-    tail = iats[1:].sum()
-    iats = iats * (span_target / tail) if tail > 0 else iats
+    spike_tail = float(iats[1:][spike_mask[1:]].sum())
+    plain_tail = float(iats[1:][~spike_mask[1:]].sum())
+    if spike_mask.any() and plain_tail > 0 and span_target > spike_tail:
+        scale = (span_target - spike_tail) / plain_tail
+        iats = np.where(spike_mask, iats, iats * scale)
+    else:
+        tail = iats[1:].sum()
+        iats = iats * (span_target / tail) if tail > 0 else iats
     arrivals = np.cumsum(iats)
     has_io = rng.random(n) < cfg.io_fraction
     io_dur = rng.uniform(cfg.io_ms_range[0], cfg.io_ms_range[1], size=n) / 1e3

@@ -1,0 +1,2 @@
+from repro.kernels.group_pick.ops import (pick_order,  # noqa: F401
+                                          pick_order_argmin, pick_order_ref)

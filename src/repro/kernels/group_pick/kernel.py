@@ -1,0 +1,70 @@
+"""Pallas kernel: per-group k-smallest ``(vruntime, rid)`` pick.
+
+One grid step handles a block of ``gb`` engine groups; each group's pool
+keys live in VMEM and the ``kmax`` winners are extracted by iterative
+two-level argmin (min vruntime, then min rid among its ties — ``rid`` is
+unique, so the winner is unique; sentinel ``INT32_MAX`` slots resolve by
+first-position argmin, matching the stable-argsort reference).  ``kmax``
+is the lane count — single digits — so the loop beats materializing a
+full sort network for the tiny pools this serves.
+
+TPU note: the pool axis is the lane (last) dimension; pad ``CAP`` to a
+multiple of 128 for native tiling.  Off-TPU callers go through the jnp
+reference in ``ops.py`` instead (or run this kernel in interpret mode,
+as ``tests/test_jax_cluster.py`` does for parity).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_IMAX = 2**31 - 1        # plain int: jnp scalars may not be captured
+
+
+def _pick_kernel(vr_ref, rid_ref, out_ref, *, kmax: int):
+    vr = vr_ref[:, :]                          # [gb, CAP] int32
+    rid = rid_ref[:, :]
+    cap = vr.shape[1]
+    pos = jax.lax.broadcasted_iota(jnp.int32, vr.shape, 1)
+
+    def body(i, carry):
+        vr_i, avail, out = carry
+        m1 = jnp.min(vr_i, axis=1, keepdims=True)          # min vruntime
+        tie_rid = jnp.where(vr_i == m1, rid, _IMAX)
+        m2 = jnp.min(tie_rid, axis=1, keepdims=True)       # min rid in tie
+        win = (vr_i == m1) & (tie_rid == m2)
+        # first AVAILABLE position of the winner: unique for valid keys;
+        # sentinel ties advance position by position like the stable
+        # sort (a vr-only mask would re-pick the first sentinel forever)
+        p = jnp.min(jnp.where(win, avail, cap), axis=1)
+        out = out.at[:, i].set(p.astype(jnp.int32))
+        taken = pos == p[:, None]
+        vr_i = jnp.where(taken, _IMAX, vr_i)               # mask winner
+        avail = jnp.where(taken, cap, avail)
+        return vr_i, avail, out
+
+    out0 = jnp.zeros(out_ref.shape, jnp.int32)
+    _, _, out = jax.lax.fori_loop(0, kmax, body, (vr, pos, out0))
+    out_ref[:, :] = out
+
+
+@partial(jax.jit, static_argnames=("kmax", "gb", "interpret"))
+def pick_order_pallas(vr: jnp.ndarray, rid: jnp.ndarray, kmax: int,
+                      gb: int = 8, interpret: bool = False) -> jnp.ndarray:
+    """``[G, CAP]`` int32 keys -> ``[G, kmax]`` winning pool positions."""
+    G, CAP = vr.shape
+    gb = min(gb, G)
+    if G % gb:
+        gb = 1
+    return pl.pallas_call(
+        partial(_pick_kernel, kmax=kmax),
+        grid=(G // gb,),
+        in_specs=[pl.BlockSpec((gb, CAP), lambda g: (g, 0)),
+                  pl.BlockSpec((gb, CAP), lambda g: (g, 0))],
+        out_specs=pl.BlockSpec((gb, kmax), lambda g: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, kmax), jnp.int32),
+        interpret=interpret,
+    )(vr.astype(jnp.int32), rid.astype(jnp.int32))

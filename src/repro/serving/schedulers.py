@@ -24,6 +24,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core.dispatch import BoundedTimeline
 from repro.core.spec import SCHEDULER_REGISTRY, SchedulerSpec
 from repro.serving.request import Request
 
@@ -284,7 +285,7 @@ class SFSScheduler(Scheduler):
         self._iats: deque[int] = deque(maxlen=adaptive_window)
         self._last_arrival: Optional[int] = None
         self._since_update = 0
-        self.slice_timeline: list[tuple[int, int]] = [(0, self.S)]
+        self.slice_timeline = BoundedTimeline((0, self.S))
         self.overload_bypasses = 0
 
     # -- adaptive S (paper §V-C) --------------------------------------------

@@ -43,7 +43,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.dispatch import ServerStateColumns, ServerView
+from repro.core.dispatch import (BoundedTimeline, ServerStateColumns,
+                                 ServerView)
 from repro.core.spec import ServerSpec
 from repro.serving.cluster import ClusterConfig, ClusterFrontend, EngineView
 from repro.serving.engine import Engine
@@ -128,6 +129,42 @@ class _RequestStore:
         r.slot = None
         return r
 
+    def write_back_many(self, rows: Sequence[int]) -> list:
+        """Batched :meth:`write_back` — one fancy-indexed gather and
+        ``tolist`` per column (native Python scalars), then plain
+        attribute stores.  Identical results, ~3x cheaper per row, which
+        matters when a million-request run collects in one call."""
+        idx = np.asarray(rows, np.int64)
+        td = self.tokens_done[idx].tolist()
+        pd = self.prefill_done[idx].tolist()
+        sv = self.served[idx].tolist()
+        nc = self.n_ctx[idx].tolist()
+        dm = self.demoted[idx].tolist()
+        fs = self.first_start[idx].tolist()
+        fin = self.finish[idx].tolist()
+        qe = self.queue_enter[idx].tolist()
+        qd = self.queue_delay[idx].tolist()
+        vr = self.vruntime[idx].tolist()
+        sl = self.slice_left[idx].tolist()
+        ss = self.slice_set[idx].tolist()
+        out = []
+        for k, row in enumerate(rows):
+            r = self.reqs[row]
+            r.tokens_done = td[k]
+            r.prefill_done = pd[k]
+            r.served_ticks = sv[k]
+            r.n_ctx = nc[k]
+            r.demoted = dm[k]
+            r.first_start = None if fs[k] < 0 else fs[k]
+            r.finish = fin[k]
+            r.queue_enter = qe[k]
+            r.queue_delay = qd[k]
+            r.vruntime = vr[k]
+            r.slice_left = sl[k] if ss[k] else None
+            r.slot = None
+            out.append(r)
+        return out
+
 
 class _VectorGroup:
     """G identical engines stepped together as arrays."""
@@ -155,7 +192,8 @@ class _VectorGroup:
         self._iats = [deque(maxlen=self.window) for _ in range(G)]
         self._last_arrival = np.full(G, -1, np.int64)
         self._since_update = np.zeros(G, np.int64)
-        self.slice_timeline = [[(0, int(init_S))] for _ in range(G)]
+        self.slice_timeline = [BoundedTimeline((0, int(init_S)))
+                               for _ in range(G)]
         self.overload_bypasses = np.zeros(G, np.int64)
         self.filter_rids = np.full((G, lanes), -1, np.int64)
         self.filter_count = np.zeros(G, np.int64)

@@ -133,6 +133,45 @@ def test_vector_backend_matches_object_with_stragglers():
     assert _full_fingerprint(obj.raw) == _full_fingerprint(vec.raw)
 
 
+# ---------------------------------------------------------------------------
+# JAX backend: bit-exact vs the numpy vector backend (and therefore the
+# object engines, by the tests above)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_engines", [4, 64])
+@pytest.mark.parametrize("dispatch", ["hash", "least-outstanding", "pull",
+                                      "sfs-aware"])
+def test_jax_backend_bit_exact_vs_vector(n_engines, dispatch):
+    """engine="jax" == engine="vector", field for field, on shared seeds
+    — the numpy vector backend is the bit-exactness reference for the
+    jitted group stepping (docs/CLUSTER.md "Scaling past 64 engines").
+    Includes the learned-predictor feedback loop: the jitted step must
+    emit completions in the object cluster's replay order or the
+    history predictor's observation stream (and every later dispatch
+    decision) diverges."""
+    servers = tuple(ServerSpec(cores=4) for _ in range(n_engines))
+    wl = TickWorkloadSpec(n=250, load=1.0, seed=23)
+    vec = _run_backend("vector", servers, dispatch, "history", wl)
+    jx = _run_backend("jax", servers, dispatch, "history", wl)
+    assert _full_fingerprint(vec.raw) == _full_fingerprint(jx.raw)
+    assert vec.dispatch_counts == jx.dispatch_counts
+    assert vec.eta_log == jx.eta_log
+    assert vec.overload_bypasses == jx.overload_bypasses
+    assert vec.fingerprint() == jx.fingerprint()
+
+
+def test_jax_backend_bit_exact_on_cfs_group():
+    """Pure-CFS groups take the sfs=False tick body (no FILTER event
+    lanes, single event grid) — exactness must hold there too."""
+    servers = tuple(ServerSpec(cores=4, scheduler="cfs") for _ in range(8))
+    wl = TickWorkloadSpec(n=300, load=1.0, seed=17)
+    vec = _run_backend("vector", servers, "least-outstanding", "oracle", wl)
+    jx = _run_backend("jax", servers, "least-outstanding", "oracle", wl)
+    assert _full_fingerprint(vec.raw) == _full_fingerprint(jx.raw)
+    assert vec.dispatch_counts == jx.dispatch_counts
+
+
 def test_vector_and_des_agree_on_sfs_aware_headline():
     """Three-way cross-validation on shared seeds: the cluster claim
     (sfs-aware <= hash on short P99 under load) holds in the DES and in

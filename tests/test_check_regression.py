@@ -1,0 +1,88 @@
+"""Perf-regression gate semantics (benchmarks/check_regression.py).
+
+Regression coverage for the wall-clock gate: it must compare wall time
+over MATCHED rows (adding a scenario must not trip — or dropping one
+mask — the 1.5x budget), and an identity-key schema change must fail
+once and loudly instead of reporting every baseline row as dropped.
+"""
+import importlib.util
+import json
+import pathlib
+
+_path = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _path)
+check_regression = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_regression)
+
+
+def _row(scenario, policy, wall_s, short_p99=10.0, long_p99=100.0,
+         **extra):
+    row = {"layer": "tick-engine", "scenario": scenario, "policy": policy,
+           "engines": 4, "load": 1.0, "n": 1000, "short_p99": short_p99,
+           "long_p99": long_p99, "wall_s": wall_s}
+    row.update(extra)
+    return row
+
+
+def _dump(dirpath, name, rows):
+    payload = {"rows": rows,
+               "total_wall_s": round(sum(r["wall_s"] for r in rows), 3)}
+    p = dirpath / name
+    with open(p, "w") as f:
+        json.dump(payload, f)
+    return str(p)
+
+
+def _check(tmp_path, base_rows, new_rows):
+    base_dir = tmp_path / "baselines"
+    base_dir.mkdir(exist_ok=True)
+    _dump(base_dir, "BENCH_x.json", base_rows)
+    new = _dump(tmp_path, "BENCH_x.json", new_rows)
+    return check_regression.check_file(new, baseline_dir=str(base_dir))
+
+
+def test_new_scenario_does_not_trip_wall_gate(tmp_path):
+    """Regression: total_wall_s compared across different row sets, so
+    landing a (slow) new scenario tripped the 1.5x budget."""
+    base = [_row("a", "hash", 1.0), _row("a", "sfs-aware", 1.0)]
+    new = base + [_row("fleet1024", "hash", 50.0)]
+    assert _check(tmp_path, base, new) == []
+
+
+def test_dropped_scenario_does_not_mask_wall_regression(tmp_path):
+    """Regression: dropping a heavy scenario used to shrink the new
+    total below budget even when every surviving row got slower."""
+    base = [_row("a", "hash", 1.0), _row("heavy", "hash", 100.0)]
+    new = [_row("a", "hash", 1.9)]
+    fails = _check(tmp_path, base, new)
+    assert any("wall-clock regression" in f for f in fails), fails
+    assert any("row dropped" in f for f in fails), fails
+
+
+def test_matched_wall_regression_still_fails(tmp_path):
+    base = [_row("a", "hash", 1.0), _row("a", "sfs-aware", 1.0)]
+    new = [_row("a", "hash", 2.0), _row("a", "sfs-aware", 2.0)]
+    fails = _check(tmp_path, base, new)
+    assert len(fails) == 1 and "wall-clock regression" in fails[0]
+
+
+def test_schema_change_fails_once_and_loudly(tmp_path):
+    """Adding an identity field desyncs every key; that must surface as
+    ONE schema-change failure, not one 'row dropped' per baseline row."""
+    base = [_row("a", "hash", 1.0), _row("a", "sfs-aware", 1.0),
+            _row("b", "hash", 1.0)]
+    new = [_row("a", "hash", 1.0, backend="jax"),
+           _row("a", "sfs-aware", 1.0, backend="jax"),
+           _row("b", "hash", 1.0, backend="jax")]
+    fails = _check(tmp_path, base, new)
+    assert len(fails) == 1, fails
+    assert "schema" in fails[0]
+    assert "backend" in fails[0]
+
+
+def test_short_p99_gate_unchanged(tmp_path):
+    base = [_row("a", "hash", 1.0, short_p99=10.0)]
+    new = [_row("a", "hash", 1.0, short_p99=12.0)]
+    fails = _check(tmp_path, base, new)
+    assert len(fails) == 1 and "short_p99 regression" in fails[0]

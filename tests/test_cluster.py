@@ -265,3 +265,50 @@ def test_merged_slice_timeline_single_server_keeps_legacy_shape():
         server=SimConfig(cores=4, policy="sfs")))
     assert clus.merged.slice_timeline == single.slice_timeline
     assert all(len(e) == 2 for e in clus.merged.slice_timeline)
+
+
+# ---------------------------------------------------------------------------
+# Bounded slice timelines (regression: unbounded growth on long runs)
+
+
+def test_slice_timeline_bounded_on_long_runs():
+    """Regression: SFSAwareDispatch.slice_timeline grew one entry per
+    adaptive window forever.  Feed enough arrivals for ~20k window
+    updates and check the trace stays capped (decimated, first and
+    latest entries preserved)."""
+    from repro.core.dispatch import BoundedTimeline, SFSAwareDispatch
+
+    class _V:
+        lanes = 2
+
+    pol = SFSAwareDispatch([_V(), _V()], adaptive_window=1)
+    for t in range(20_000):
+        pol._observe(float(t))
+    tl = pol.slice_timeline
+    assert isinstance(tl, BoundedTimeline)
+    assert 2 <= len(tl) <= tl.cap
+    assert tl[0] == (0.0, 32.0)                    # first entry survives
+    assert tl[-1][0] == 19_999.0                   # latest entry survives
+    ts = [t for t, _ in tl]
+    assert ts == sorted(ts)
+
+
+def test_bounded_timeline_decimation_semantics():
+    from repro.core.dispatch import BoundedTimeline
+    tl = BoundedTimeline(cap=8)
+    for i in range(100):
+        tl.append((i, i))
+    assert len(tl) <= 8
+    assert tl[-1] == (99, 99)
+    assert tl[0] == (0, 0)
+    assert list(tl) == sorted(tl)
+    # list/equality interop used by the simulator merge path
+    assert tl == list(tl)
+
+
+def test_engine_and_vector_timelines_bounded():
+    """The per-engine scheduler and the vector-group mirrors share the
+    same bounded container."""
+    from repro.core.dispatch import BoundedTimeline
+    eng = Engine(EngineConfig(lanes=2, n_slots=16, policy="sfs"))
+    assert isinstance(eng.scheduler.slice_timeline, BoundedTimeline)

@@ -4,7 +4,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.workload import (AZURE_TABLE_I, FaaSBenchConfig,
-                                 function_table, generate, offered_load)
+                                 _spike_windows, function_table, generate,
+                                 offered_load)
 
 
 def test_deterministic():
@@ -76,6 +77,48 @@ def test_per_function_model_validation_and_determinism():
     assert a == b
     legacy = generate(FaaSBenchConfig(n_requests=300, seed=3))
     assert all(r.func_id == 0 for r in legacy)
+
+
+def test_trace_spikes_survive_small_n():
+    """Regression: smoke-sized trace workloads used to crash in
+    rng.choice when n <= spike_size (or n_spikes > n - spike_size)."""
+    for n in (1, 2, 50, 119, 120, 121, 400):
+        reqs = generate(FaaSBenchConfig(n_requests=n, seed=5, iat="trace"))
+        assert len(reqs) == n
+        arr = [r.arrival for r in reqs]
+        assert arr == sorted(arr)
+
+
+def test_spike_windows_disjoint_and_in_range():
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        n, k, size = 1000, 7, 120
+        starts = _spike_windows(rng, n, k, size)
+        assert len(starts) == k
+        ends = starts + size
+        assert starts[0] >= 0 and ends[-1] <= n
+        # windows must not overlap (old code could silently merge them)
+        assert all(e <= s for e, s in zip(ends, starts[1:]))
+    # infeasible configs clamp instead of raising
+    assert len(_spike_windows(np.random.default_rng(0), 10, 5, 120)) == 0
+    assert len(_spike_windows(np.random.default_rng(0), 0, 5, 1)) == 0
+    assert len(_spike_windows(np.random.default_rng(0), 250, 5, 120)) == 2
+
+
+def test_trace_spike_iats_pinned_through_rescale():
+    """Regression: the exact-load rescale used to stretch spike IATs,
+    so 'spikes' were no longer dense; they must stay at spike_iat_s
+    exactly while the offered load still normalizes."""
+    cfg = FaaSBenchConfig(n_requests=2000, seed=7, iat="trace",
+                          n_spikes=4, spike_size=100, spike_iat_s=1e-3)
+    reqs = generate(cfg)
+    d = np.diff([r.arrival for r in reqs])
+    pinned = np.isclose(d, cfg.spike_iat_s, rtol=0, atol=1e-12).sum()
+    # each window contributes spike_size IATs (minus one if a window
+    # includes index 0, whose IAT is the start offset, not a gap)
+    assert pinned >= cfg.n_spikes * cfg.spike_size - 1
+    assert offered_load(reqs, cfg.cores) == pytest.approx(cfg.load,
+                                                          rel=0.02)
 
 
 def test_io_events():
