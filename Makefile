@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-jax bench-smoke bench-predict bench-fleet \
-  bench bench-json bench-gate
+  bench bench-json bench-gate trace-demo
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -14,7 +14,8 @@ test-fast:
 	$(PY) -m pytest -q tests/test_simulator.py tests/test_workload.py \
 	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py \
 	  tests/test_predict.py tests/test_spec.py \
-	  tests/test_vector_cluster.py tests/test_jax_cluster.py
+	  tests/test_vector_cluster.py tests/test_jax_cluster.py \
+	  tests/test_telemetry.py
 
 # jax-backend agreement + edge suites, pinned to the CPU backend (what
 # CI runs across the python-version matrix)
@@ -45,6 +46,14 @@ bench-json:
 
 bench-gate:
 	$(PY) benchmarks/check_regression.py
+
+# one sfs-aware-vs-hash Perfetto lifecycle trace of the fleet64 smoke
+# scenario (docs/OBSERVABILITY.md) — load the JSON in ui.perfetto.dev
+# or chrome://tracing
+trace-demo:
+	mkdir -p artifacts/bench
+	$(PY) benchmarks/cluster_sweep.py --trace \
+	  artifacts/bench/trace_fleet64.json --n 10000
 
 # full benchmark suite (paper figures + cluster sweep)
 bench:

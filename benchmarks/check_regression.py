@@ -48,9 +48,15 @@ def _abs_slack(row: dict) -> float:
     return 0.5 if row.get("layer") == "tick-engine" else 0.01
 
 
+# metrics + telemetry metadata: everything here is an output of the
+# run, not part of a row's identity ("provenance" and "phases" are
+# nested dicts anyway — unhashable as key material)
+NON_IDENTITY = ("short_p99", "long_p99", "wall_s", "provenance", "phases")
+
+
 def _key(row: dict) -> tuple:
     return tuple(sorted((k, v) for k, v in row.items()
-                        if k not in ("short_p99", "long_p99", "wall_s")))
+                        if k not in NON_IDENTITY))
 
 
 def check_file(path: str, baseline_dir: str = BASELINE_DIR) -> list:
@@ -96,6 +102,17 @@ def check_file(path: str, baseline_dir: str = BASELINE_DIR) -> list:
         if r["long_p99"] > b["long_p99"] * (1 + LONG_P99_REL) + 1.0:
             print(f"  note {name}: long_p99 drift [{label}]: "
                   f"{r['long_p99']:.2f} vs baseline {b['long_p99']:.2f}")
+        # provenance drift (spec grammar / seed / result fingerprint
+        # changed for an identity-identical cell) warns but never fails:
+        # it is exactly the signal to review when a deliberate semantic
+        # change lands, and noise when the baseline predates provenance
+        bp, rp = b.get("provenance"), r.get("provenance")
+        if bp is not None and rp is not None and bp != rp:
+            drift = [f for f in ("spec", "seed", "result_fp")
+                     if bp.get(f) != rp.get(f)]
+            print(f"  warn {name}: provenance drift [{label}]: "
+                  f"{'/'.join(drift) or 'fields'} changed vs baseline "
+                  "(review, then re-pin with --update)")
     for key in new_rows.keys() - base_rows.keys():
         ident = dict(key)
         print(f"  note {name}: new row not in baseline: "

@@ -82,10 +82,14 @@ MIXED_SERVERS = (ServerSpec(cores=6), ServerSpec(cores=6),
 def run_tick(policy: str, servers: tuple, load: float, *, n: int,
              seed: int, scenario: str = "uniform",
              backend: str = "tick") -> dict:
+    from repro.core.telemetry import Telemetry
     spec = ExperimentSpec(
         engine=backend, servers=servers, dispatch=policy,
         workload=TickWorkloadSpec(n=n, load=load, seed=seed))
-    res = run_experiment(spec, max_ticks=50_000_000)
+    # profile-only telemetry keeps every fast path (gap advance + scan
+    # windows) live, so the phase breakdown rides along at no perf cost
+    tel = Telemetry(profile=True)
+    res = run_experiment(spec, max_ticks=50_000_000, telemetry=tel)
     return {
         "layer": "tick-engine", "scenario": scenario, "policy": policy,
         "backend": backend,
@@ -94,6 +98,9 @@ def run_tick(policy: str, servers: tuple, load: float, *, n: int,
         "dispatch_counts": res.dispatch_counts,
         "overload_bypasses": res.overload_bypasses,
         "buckets": res.buckets(),
+        "provenance": {"spec": spec.to_json(), "seed": seed,
+                       "result_fp": res.fingerprint()[:16]},
+        "phases": tel.profile.summary(),
     }
 
 
@@ -102,12 +109,16 @@ def run_des(policy: str, servers: tuple, load: float, *, n: int,
     """DES sweep cell; pools a couple of seeds so p99 is stable."""
     total = sum(s.cores for s in servers)
     svc, ta, rte, counts, bypasses, wall = [], [], [], None, 0, 0.0
+    prov, fps = None, []
     for seed in seeds:
         spec = ExperimentSpec(
             engine="des", servers=servers, dispatch=policy,
             workload=FaaSBenchConfig(n_requests=n, cores=total, load=load,
                                      seed=seed))
+        if prov is None:      # seeds differ only in the workload seed
+            prov = spec.to_json()
         res = run_experiment(spec)
+        fps.append(res.fingerprint()[:16])
         svc.append(res.service)
         ta.append(res.turnaround)
         rte.append(res.rte)
@@ -122,6 +133,8 @@ def run_des(policy: str, servers: tuple, load: float, *, n: int,
         "dispatch_counts": counts, "overload_bypasses": bypasses,
         "buckets": bucket_stats(np.concatenate(svc), np.concatenate(ta),
                                 np.concatenate(rte)),
+        "provenance": {"spec": prov, "seed": list(seeds),
+                       "result_fp": fps},
     }
 
 
@@ -183,6 +196,28 @@ def run_fleet1024(n: int) -> list:
     return rows
 
 
+def run_trace_demo(out_path: str, n: int) -> int:
+    """``--trace``: render one sfs-aware-vs-hash lifecycle trace of the
+    fleet64 smoke scenario (64 engines x 4 lanes, vector backend, load
+    1.0) as a Chrome-trace JSON loadable in Perfetto / chrome://tracing.
+    Each policy becomes its own process row (``make trace-demo``)."""
+    from repro.core.telemetry import Telemetry, save_chrome_trace
+    servers = uniform_servers(64, 4)
+    traces = {}
+    for pol in ("sfs-aware", "hash"):
+        spec = ExperimentSpec(
+            engine="vector", servers=servers, dispatch=pol,
+            workload=TickWorkloadSpec(n=n, load=1.0, seed=7))
+        tel = Telemetry(trace=True, series_cadence=100)
+        res = run_experiment(spec, max_ticks=50_000_000, telemetry=tel)
+        traces[pol] = tel.trace
+        print(f"  {pol:12s} events={len(tel.trace):7d} "
+              f"digest={tel.trace.digest()[:16]} wall={res.wall_s:.1f}s")
+    save_chrome_trace(out_path, traces)
+    print("wrote", out_path)
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -192,9 +227,15 @@ def main(argv=None):
     ap.add_argument("--fleet1024", action="store_true",
                     help="run ONLY the 1024-engine jax-backend scenario "
                          "(own <60 s budget; asserts its headline claim)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="write ONE sfs-aware-vs-hash Perfetto trace of "
+                         "the fleet64 smoke scenario and exit")
     ap.add_argument("--n", type=int, default=None, help="requests per run")
     # parse_known_args: tolerate suite names when driven by benchmarks.run
     args, _ = ap.parse_known_args(argv)
+
+    if args.trace:
+        return run_trace_demo(args.trace, args.n or 10_000)
 
     if args.fleet1024:
         rows = run_fleet1024(args.n or 500_000)

@@ -42,6 +42,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import hashlib
 import os
 import sys
@@ -112,17 +113,27 @@ def run_cell(predictor: str, dispatch: str, load: float, *, n: int,
     sched = ("sfs:hinted_demotion=True" if hinted_demotion else "sfs")
     svc, ta, rte, pairs = [], [], [], []
     bypasses, S_last = 0, None
+    prov, fps = None, []
     t0 = time.time()
     for seed in seeds:
-        reqs = generate(FaaSBenchConfig(
+        wl_cfg = FaaSBenchConfig(
             n_requests=n, cores=servers * cores, load=load, seed=seed,
-            n_functions=n_functions, iat=iat))
+            n_functions=n_functions, iat=iat)
+        reqs = generate(wl_cfg)
         spec = ExperimentSpec(
             engine="des",
             servers=tuple(ServerSpec(cores=cores, scheduler=sched)
                           for _ in range(servers)),
             dispatch=dispatch, predictor=predictor)
+        if prov is None:
+            # requests are pre-generated here (eta_log pairing needs
+            # them), so spec.workload is None — record the generator
+            # config alongside the spec to keep the cell reproducible
+            prov = {"spec": spec.to_json(),
+                    "workload": {"kind": "faas",
+                                 **dataclasses.asdict(wl_cfg)}}
         res = run_experiment(spec, requests=reqs)
+        fps.append(res.fingerprint()[:16])
         pairs += [(res.eta_log.get(r.rid), r.service) for r in reqs]
         svc += list(res.service)
         ta += list(res.turnaround)
@@ -135,6 +146,7 @@ def run_cell(predictor: str, dispatch: str, load: float, *, n: int,
         "n_functions": n_functions, "hinted_demotion": hinted_demotion,
         "overload_bypasses": bypasses, "dispatch_S": S_last,
         "wall_s": time.time() - t0,
+        "provenance": {**prov, "seed": list(seeds), "result_fp": fps},
         "prediction": prediction_metrics(pairs, boundary=S_last),
         "buckets": bucket_stats(np.array(svc), np.array(ta),
                                 np.array(rte)),

@@ -1,9 +1,21 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+``--telemetry [BENCH_*.json ...]`` instead renders the observability
+summary of a bench run: the host-path phase-timer breakdown (aggregated
+per backend) and provenance coverage carried in the distilled
+``BENCH_*.json`` rows (docs/OBSERVABILITY.md).  CI appends this to the
+workflow step summary next to the uploaded artifacts.
+"""
 from __future__ import annotations
 
 import glob
 import json
 import os
+import sys
+
+if __package__ in (None, ""):          # `python benchmarks/report.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 from benchmarks.roofline import analyze
 
@@ -68,7 +80,50 @@ def variant_compare(arch: str, shape: str, variants: list[str]) -> str:
     return "\n".join(out)
 
 
+def telemetry_summary(paths=None) -> str:
+    """Markdown observability digest over distilled BENCH_*.json files:
+    host-path phases aggregated per (layer, backend) plus how many rows
+    carry run provenance."""
+    paths = paths or sorted(glob.glob("BENCH_*.json"))
+    out = []
+    for p in paths:
+        if not os.path.exists(p):
+            out.append(f"### {os.path.basename(p)} — missing\n")
+            continue
+        data = json.load(open(p))
+        rows = data["rows"]
+        agg: dict = {}                  # (backend, phase) -> [total, calls]
+        for r in rows:
+            backend = r.get("backend") or r.get("layer") or "?"
+            for name, s in (r.get("phases") or {}).items():
+                slot = agg.setdefault((backend, name), [0.0, 0])
+                slot[0] += s["total_s"]
+                slot[1] += s["calls"]
+        n_prov = sum(1 for r in rows if r.get("provenance"))
+        out.append(f"### {os.path.basename(p)} — host-path phases")
+        out.append("")
+        if agg:
+            out.append("| backend | phase | total s | calls | mean us |")
+            out.append("|---|---|---|---|---|")
+            for (backend, name), (tot, calls) in sorted(
+                    agg.items(), key=lambda kv: (kv[0][0], -kv[1][0])):
+                mean_us = tot / calls * 1e6 if calls else 0.0
+                out.append(f"| {backend} | {name} | {tot:.3f} | "
+                           f"{calls} | {mean_us:.1f} |")
+        else:
+            out.append("(no phase data in rows)")
+        out.append("")
+        out.append(f"{n_prov}/{len(rows)} rows carry spec provenance "
+                   f"(total wall {data['total_wall_s']:.1f}s).")
+        out.append("")
+    return "\n".join(out)
+
+
 if __name__ == "__main__":
+    if "--telemetry" in sys.argv[1:]:
+        files = [a for a in sys.argv[1:] if not a.startswith("-")]
+        print(telemetry_summary(files or None))
+        sys.exit(0)
     print("## Dry-run matrix\n")
     print(dryrun_table())
     print("\n## Roofline (single-pod)\n")

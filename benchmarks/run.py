@@ -91,6 +91,14 @@ def write_bench_json(name: str, out_dir: str = ".") -> str:
             row["short_p99"] = buckets[keys[0]]["p99"]
             row["long_p99"] = buckets[keys[-1]]["p99"]
             row["wall_s"] = r["wall_s"]
+            # run provenance (spec JSON + seed + result fingerprint) and
+            # host-path phase breakdown ride along as non-identity
+            # metadata — check_regression warns on provenance drift but
+            # never keys or fails on either (docs/OBSERVABILITY.md)
+            if "provenance" in r:
+                row["provenance"] = r["provenance"]
+            if "phases" in r:
+                row["phases"] = r["phases"]
             rows.append(row)
     payload = {
         "suite": name,

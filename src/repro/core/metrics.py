@@ -18,12 +18,19 @@ def rtes(res: SimResult) -> np.ndarray:
 
 
 def percentiles(x: np.ndarray, ps=(50, 90, 99, 99.9)) -> dict:
+    """NaN-safe on empty input (np.percentile raises on []) — a filtered
+    bucket or an empty sweep cell yields NaNs, not a crash."""
+    x = np.asarray(x)
+    if x.size == 0:
+        return {p: float("nan") for p in ps}
     return {p: float(np.percentile(x, p)) for p in ps}
 
 
 def cdf(x: np.ndarray, n: int = 200):
-    """(xs, ys) suitable for plotting/inspection."""
-    xs = np.sort(x)
+    """(xs, ys) suitable for plotting/inspection; empty in, empty out."""
+    xs = np.sort(np.asarray(x))
+    if xs.size == 0:
+        return xs, np.array([], dtype=np.float64)
     ys = np.arange(1, len(xs) + 1) / len(xs)
     idx = np.linspace(0, len(xs) - 1, min(n, len(xs))).astype(int)
     return xs[idx], ys[idx]

@@ -208,10 +208,29 @@ class Simulator:
         # loop only ever sees *finished* requests.
         self.eta_hints: dict[int, float] = {}
         self.on_finish = None
+        # opt-in telemetry (core/telemetry.py): a lifecycle TraceRecorder
+        # (events carry float DES times) and a shared fleet-series counter
+        # dict; both None when disabled — each emit site pays one read
+        self.trace = None
+        self.trace_idx = -1
+        self.counters = None
+
+    def bind_trace(self, trace, idx: int):
+        self.trace = trace
+        self.trace_idx = idx
 
     def _finish_job(self, job: _Job):
         job.finish = self.now
         self.finished += 1
+        if self.trace is not None:
+            self.trace.emit(self.now, "complete", job.req.rid,
+                            self.trace_idx)
+        if self.counters is not None:
+            c = self.counters
+            c["completions"] += 1
+            if job.demoted:
+                c["demoted_done"] += 1
+            c["nctx_done"] += job.n_ctx
         if self.on_finish is not None:
             self.on_finish(job.req, self.now)
 
@@ -297,6 +316,9 @@ class Simulator:
             pre = self._srtf_preempt(worst)
             pre.n_ctx += 1
             self.n_ctx_total += 1
+            if self.trace is not None:
+                self.trace.emit(self.now, "preempt", pre.req.rid,
+                                self.trace_idx)
             self._seq += 1
             heapq.heappush(self.srtf_wait, (pre.remaining(), self._seq, pre))
             self._srtf_start(worst, job)
@@ -366,6 +388,9 @@ class Simulator:
             # predicted-long: skip FILTER straight to CFS — saves the
             # wasted slice S and the demotion context switch
             job.demoted = True
+            if self.trace is not None:
+                self.trace.emit(self.now, "demote", req.rid,
+                                self.trace_idx)
             self._cfs_enqueue(job)
         else:
             self._enqueue_global(job)
@@ -405,6 +430,9 @@ class Simulator:
                     and self.cfg.overload_factor is not None
                     and now - job.queue_enter
                     >= self.cfg.overload_factor * self.S):
+                if self.trace is not None:
+                    self.trace.emit(now, "bypass", job.req.rid,
+                                    self.trace_idx)
                 self._cfs_enqueue(job)
                 continue
             if core.state == "cfs":
@@ -422,6 +450,8 @@ class Simulator:
                               if self.cfg.policy == "rr" else self.S)
         if self.cfg.policy == "fifo":
             job.slice_left = _INF
+        if self.trace is not None:
+            self.trace.emit(self.now, "admit", job.req.rid, self.trace_idx)
         # switch-in cost: dead time before the job's CPU burst resumes
         cost = self.cfg.ctx_switch_cost_s if core.last_rid != job.req.rid \
             else 0.0
@@ -470,9 +500,15 @@ class Simulator:
             job.n_ctx += 1
             self.n_ctx_total += 1
             if self.cfg.policy == "rr":                      # RR: back to tail
+                if self.trace is not None:
+                    self.trace.emit(self.now, "preempt", job.req.rid,
+                                    self.trace_idx)
                 self._enqueue_global(job)
             else:                                            # 4.2 demote
                 job.demoted = True
+                if self.trace is not None:
+                    self.trace.emit(self.now, "demote", job.req.rid,
+                                    self.trace_idx)
                 self._cfs_enqueue(job)
         else:                                                # shouldn't happen
             self._enqueue_global(job)
@@ -490,6 +526,9 @@ class Simulator:
         job = self._filter_release(core, t_block - core.seg_start)
         job.n_ctx += 1
         self.n_ctx_total += 1
+        if self.trace is not None:
+            self.trace.emit(self.now, "preempt", job.req.rid,
+                            self.trace_idx)
         dur = job.next_io_dur()
         job.io_idx += 1
         self._push(t_block + dur, "f_io_done", job.req.rid)
@@ -517,6 +556,9 @@ class Simulator:
             job.demoted = True
             job.n_ctx += 1
             self.n_ctx_total += 1
+            if self.trace is not None:
+                self.trace.emit(self.now, "demote", job.req.rid,
+                                self.trace_idx)
             self._push(self.now + dur, "obliv_io_to_cfs", job.req.rid)
             self._push(t_expire, "kick", )
         else:
@@ -588,6 +630,9 @@ class Simulator:
         self.busy_time += used
         job.n_ctx += 1
         self.n_ctx_total += 1
+        if self.trace is not None:
+            self.trace.emit(self.now, "preempt", job.req.rid,
+                            self.trace_idx)
         core.token += 1
         core.job, core.state = None, "idle"
         self._cfs_enqueue(job)
@@ -613,6 +658,9 @@ class Simulator:
             if self.cfs_rq:
                 job.n_ctx += 1
                 self.n_ctx_total += 1
+                if self.trace is not None:
+                    self.trace.emit(self.now, "preempt", job.req.rid,
+                                    self.trace_idx)
             self._cfs_enqueue(job)
         self._dispatch(self.now)
 
@@ -788,6 +836,40 @@ class ClusterSimulator:
                              slice_init=cfg.slice_init_s), views)
         self.central: deque = deque()          # (req, eta) under pull
         self.eta_log: dict[int, Optional[float]] = {}
+        self.views = views
+        # opt-in telemetry (core/telemetry.py), mirrors
+        # ClusterFrontend.attach_telemetry; all None when disabled
+        self.telemetry = None
+        self._trace = None
+        self._series = None
+        self._next_sample = 0.0
+
+    def attach_telemetry(self, tel):
+        """Wire a :class:`repro.core.telemetry.Telemetry` session.  Same
+        contract as ``ClusterFrontend.attach_telemetry``; event times and
+        the series cadence are in float DES seconds, and completion
+        counters are fed by each server's shared counter dict (the
+        workload ``Request`` carries no demotion state)."""
+        self.telemetry = tel
+        if tel is None:
+            return
+        self._trace = tel.trace
+        self._series = tel.series
+        if tel.trace is not None:
+            for i, s in enumerate(self.servers):
+                s.bind_trace(tel.trace, i)
+        if tel.series is not None:
+            for s in self.servers:
+                s.counters = tel.series.counters
+
+    def _sample_to(self, t: float):
+        """Emit fleet-series samples at every cadence boundary up to
+        ``t`` (state as of just before the event at ``t``)."""
+        ser = self._series
+        while self._next_sample <= t:
+            ser.sample(self._next_sample, self.views,
+                       {"central_queue": len(self.central)})
+            self._next_sample += ser.cadence
 
     # ------------------------------------------------------------------
     def _observe_finish(self, req: Request, t: float):
@@ -796,6 +878,8 @@ class ClusterSimulator:
     def _deliver(self, idx: int, req: Request, t: float,
                  eta: Optional[float] = None):
         self.policy.record(idx)
+        if self._trace is not None:
+            self._trace.emit(t, "dispatch", req.rid, idx, eta)
         srv = self.servers[idx]
         srv.inject(req, t + self.cfg.dispatch_latency_s, eta=eta)
         # process the due events now so the server's capacity/outstanding
@@ -816,6 +900,7 @@ class ClusterSimulator:
             self._deliver(idx, req, t, eta)
 
     def run(self) -> ClusterSimResult:
+        tr, ser = self._trace, self._series
         i, n = 0, len(self.reqs)
         while True:
             t_arr = self.reqs[i].arrival if i < n else _INF
@@ -824,16 +909,25 @@ class ClusterSimulator:
             if t_arr <= t_srv and t_arr < _INF:
                 req = self.reqs[i]
                 i += 1
+                if ser is not None:
+                    self._sample_to(req.arrival)
+                if tr is not None:
+                    tr.emit(req.arrival, "arrival", req.rid)
                 idx, eta = route_hinted(self.policy, self.predictor,
                                         req.rid, req.func_id, req.service,
                                         req.arrival)
                 self.eta_log[req.rid] = eta
+                if ser is not None:
+                    ser.counters["predictor_hits" if eta is not None
+                                 else "predictor_misses"] += 1
                 if idx is None:
                     self.central.append((req, eta))
                 else:
                     self._deliver(idx, req, req.arrival, eta)
                 self._drain_pull(req.arrival)
             elif t_srv < _INF:
+                if ser is not None:
+                    self._sample_to(t_srv)
                 srv = min(self.servers, key=Simulator.next_event_time)
                 srv.step()
                 self._drain_pull(srv.now)

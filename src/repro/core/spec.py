@@ -571,6 +571,60 @@ class ExperimentSpec:
     def total_cores(self) -> int:
         return sum(s.cores for s in self.servers)
 
+    # -- provenance (JSON round-trip) -----------------------------------
+    def to_json(self) -> dict:
+        """JSON-safe provenance dict stamped into benchmark artifacts;
+        :meth:`from_json` rebuilds an equal spec (asserted in tests).
+        Servers/dispatch/predictor travel through their canonical string
+        grammar; a non-spec predictor instance degrades to its name
+        (best-effort provenance, not rebuildable)."""
+        pred = (str(self.predictor)
+                if isinstance(self.predictor, PredictorSpec)
+                else getattr(self.predictor, "name", repr(self.predictor)))
+        d = {"engine": self.engine,
+             "servers": [str(s) for s in self.servers],
+             "dispatch": str(self.dispatch),
+             "predictor": pred,
+             "dispatch_latency": self.dispatch_latency,
+             "workload": None}
+        wl = self.workload
+        if isinstance(wl, TickWorkloadSpec):
+            d["workload"] = {"kind": "tick", **dataclasses.asdict(wl)}
+        elif wl is not None:
+            from repro.core.workload import FaaSBenchConfig
+            if isinstance(wl, FaaSBenchConfig):
+                d["workload"] = {"kind": "faas", **dataclasses.asdict(wl)}
+            else:
+                d["workload"] = {"kind": "opaque", "repr": repr(wl)}
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ExperimentSpec":
+        """Rebuild a spec from :meth:`to_json` output (tuple-typed
+        workload fields come back as JSON lists and are re-tupled)."""
+        wl = d.get("workload")
+        workload = None
+        if wl is not None:
+            kind = wl.get("kind")
+            body = {k: v for k, v in wl.items() if k != "kind"}
+            if kind == "tick":
+                for k in ("short_range", "long_range"):
+                    body[k] = tuple(body[k])
+                workload = TickWorkloadSpec(**body)
+            elif kind == "faas":
+                from repro.core.workload import FaaSBenchConfig
+                body["duration_table"] = tuple(
+                    tuple(row) for row in body["duration_table"])
+                body["io_ms_range"] = tuple(body["io_ms_range"])
+                workload = FaaSBenchConfig(**body)
+            else:
+                raise ValueError(
+                    f"cannot rebuild workload of kind {kind!r}")
+        return cls(engine=d["engine"], servers=tuple(d["servers"]),
+                   dispatch=d["dispatch"], predictor=d["predictor"],
+                   workload=workload,
+                   dispatch_latency=d.get("dispatch_latency", 0.0))
+
     # -- converters -----------------------------------------------------
     def to_cluster_sim_config(self):
         from repro.core.simulator import ClusterSimConfig
@@ -619,6 +673,9 @@ class ExperimentResult:
     dispatch_S: Optional[float]
     wall_s: float
     raw: object
+    # the repro.core.telemetry.Telemetry session attached via
+    # run_experiment(telemetry=...); None when telemetry was off
+    telemetry: object = None
 
     @property
     def n(self) -> int:
@@ -663,19 +720,31 @@ class ExperimentResult:
 
 
 def run_experiment(spec: ExperimentSpec, requests=None, *,
-                   max_ticks: int = 20_000_000) -> ExperimentResult:
+                   max_ticks: int = 20_000_000,
+                   telemetry=None) -> ExperimentResult:
     """Run one :class:`ExperimentSpec` end to end.
 
     ``requests`` overrides the spec's declarative workload with an
     explicit request list (core requests for ``des``, serving requests
     for ``tick``).  Deterministic given the spec/workload.
+
+    ``telemetry`` opts into the observability layer
+    (:mod:`repro.core.telemetry`): a ``Telemetry`` / ``TelemetryConfig``
+    instance, or ``True`` for lifecycle tracing only.  It is a runtime
+    attachment, not a spec field — enabling it never changes results
+    (pinned in ``tests/test_telemetry.py``); the session comes back on
+    ``ExperimentResult.telemetry``.
     """
     spec = spec if isinstance(spec, ExperimentSpec) else ExperimentSpec(
         **spec)
+    tel = None
+    if telemetry is not None and telemetry is not False:
+        from repro.core.telemetry import Telemetry
+        tel = Telemetry.ensure(telemetry)
     t0 = time.time()
     if spec.engine == "des":
-        return _run_des(spec, requests, t0)
-    return _run_tick(spec, requests, t0, max_ticks)
+        return _run_des(spec, requests, t0, tel)
+    return _run_tick(spec, requests, t0, max_ticks, tel)
 
 
 def _build_tick_cluster(spec: ExperimentSpec):
@@ -694,7 +763,8 @@ def _build_tick_cluster(spec: ExperimentSpec):
     return Cluster(engines, spec.to_cluster_config())
 
 
-def _run_des(spec: ExperimentSpec, requests, t0: float) -> ExperimentResult:
+def _run_des(spec: ExperimentSpec, requests, t0: float,
+             tel=None) -> ExperimentResult:
     from repro.core.simulator import ClusterSimulator
     from repro.core.workload import FaaSBenchConfig, generate
     if requests is None:
@@ -703,7 +773,10 @@ def _run_des(spec: ExperimentSpec, requests, t0: float) -> ExperimentResult:
                 "DES experiment needs a FaaSBenchConfig workload (or an "
                 f"explicit request list); got {spec.workload!r}")
         requests = generate(spec.workload)
-    res = ClusterSimulator(requests, spec.to_cluster_sim_config()).run()
+    sim = ClusterSimulator(requests, spec.to_cluster_sim_config())
+    if tel is not None:
+        sim.attach_telemetry(tel)
+    res = sim.run()
     st = res.merged.stats
     return ExperimentResult(
         spec=spec, engine="des", unit="s",
@@ -718,11 +791,11 @@ def _run_des(spec: ExperimentSpec, requests, t0: float) -> ExperimentResult:
         dispatch_counts=list(res.dispatch_counts),
         overload_bypasses=res.overload_bypasses,
         eta_log=dict(res.eta_log), dispatch_S=res.dispatch_S,
-        wall_s=time.time() - t0, raw=res)
+        wall_s=time.time() - t0, raw=res, telemetry=tel)
 
 
 def _run_tick(spec: ExperimentSpec, requests, t0: float,
-              max_ticks: int) -> ExperimentResult:
+              max_ticks: int, tel=None) -> ExperimentResult:
     if requests is None:
         if not isinstance(spec.workload, TickWorkloadSpec):
             raise ValueError(
@@ -730,6 +803,8 @@ def _run_tick(spec: ExperimentSpec, requests, t0: float,
                 f"explicit request list); got {spec.workload!r}")
         requests = spec.workload.generate(spec.total_cores)
     cluster = _build_tick_cluster(spec)
+    if tel is not None:
+        cluster.attach_telemetry(tel)
     done = cluster.run(requests, max_ticks=max_ticks)
     return ExperimentResult(
         spec=spec, engine=spec.engine, unit="t",
@@ -747,4 +822,4 @@ def _run_tick(spec: ExperimentSpec, requests, t0: float,
         overload_bypasses=cluster.summary()["overload_bypasses"],
         eta_log=dict(cluster.eta_log),
         dispatch_S=getattr(cluster.policy, "S", None),
-        wall_s=time.time() - t0, raw=done)
+        wall_s=time.time() - t0, raw=done, telemetry=tel)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from time import perf_counter
 from typing import Optional, Sequence
 
 import numpy as np
@@ -113,18 +114,41 @@ class ClusterFrontend:
     def __init__(self, views: Sequence[ServerView],
                  cfg: Optional[ClusterConfig] = None):
         self.cfg = cfg or ClusterConfig()
-        self.n_servers = len(views)
+        self.views = list(views)
+        self.n_servers = len(self.views)
         self.policy: DispatchPolicy = make_dispatch(
             resolve_dispatch(self.cfg.policy,
                              overload_factor=self.cfg.overload_factor,
                              adaptive_window=self.cfg.adaptive_window,
-                             slice_init=self.cfg.slice_init), views)
+                             slice_init=self.cfg.slice_init), self.views)
         self.predictor = make_predictor(self.cfg.predictor)
         self.eta_log: dict[int, Optional[int]] = {}
         self.central_queue: deque[Request] = deque()
         self.t = 0
         # (t, central_qlen after pulls, tuple of per-engine active counts)
         self.tick_log: list[tuple[int, int, tuple]] = []
+        # opt-in telemetry (core/telemetry.py): all None when disabled,
+        # so the hot loop pays one attribute read per guard and nothing
+        # else (pinned by tests/test_telemetry.py)
+        self.telemetry = None
+        self._trace = None
+        self._series = None
+        self._prof = None
+
+    def attach_telemetry(self, tel):
+        """Wire a :class:`repro.core.telemetry.Telemetry` session into
+        this run.  Must be called before ``run()``; backends extend
+        ``_bind_backend`` to hook their stepping loops."""
+        self.telemetry = tel
+        if tel is None:
+            return
+        self._trace = tel.trace
+        self._series = tel.series
+        self._prof = tel.profile
+        self._bind_backend(tel)
+
+    def _bind_backend(self, tel):
+        """Backend hook: propagate collectors into the stepping layer."""
 
     # -- backend hooks -------------------------------------------------
     def _submit(self, idx: int, req: Request):
@@ -145,6 +169,13 @@ class ClusterFrontend:
     # ------------------------------------------------------------------
     def _observe_finish(self, req: Request, t: int):
         """Feedback loop: predictors only ever see finished requests."""
+        ser = self._series
+        if ser is not None:
+            c = ser.counters
+            c["completions"] += 1
+            if req.demoted:
+                c["demoted_done"] += 1
+            c["nctx_done"] += req.n_ctx
         self.predictor.observe(req.func_id, req.service_demand)
 
     def route(self, req: Request) -> Optional[int]:
@@ -159,11 +190,18 @@ class ClusterFrontend:
         idx, eta = route_hinted(self.policy, self.predictor, req.rid,
                                 req.func_id, req.eta_hint, self.t)
         self.eta_log[req.rid] = eta
+        ser = self._series
+        if ser is not None:
+            ser.counters["predictor_hits" if eta is not None
+                         else "predictor_misses"] += 1
         return idx
 
     def _deliver(self, idx: int, req: Request):
         self.policy.record(idx)
         eta = self.eta_log.get(req.rid)
+        if self._trace is not None:
+            # dispatch-route event: chosen server + predictor ETA
+            self._trace.emit(self.t, "dispatch", req.rid, idx, eta)
         if req.eta_hint is None and eta is not None:
             # propagate the learned estimate so a per-engine scheduler
             # running in hinted_demotion mode can use it; an explicit
@@ -173,6 +211,12 @@ class ClusterFrontend:
 
     def tick(self, arrivals: Sequence[Request] = ()):
         """Dispatch this tick's arrivals, drain pulls, tick every engine."""
+        tr, prof = self._trace, self._prof
+        if tr is not None and arrivals:
+            t = self.t
+            for r in arrivals:
+                tr.emit(t, "arrival", r.rid)
+        t0 = perf_counter() if prof is not None else 0.0
         if isinstance(self.policy, HashDispatch):
             # legacy Router semantics: route the whole tick's batch
             # against pre-delivery state (p2c comparisons unaffected by
@@ -197,9 +241,18 @@ class ClusterFrontend:
                 if idx is None:
                     break
                 self._deliver(idx, self.central_queue.popleft())
+        if prof is not None:
+            prof.add("route", perf_counter() - t0)
+            t0 = perf_counter()
         self._step()
+        if prof is not None:
+            prof.add("step", perf_counter() - t0)
         self.tick_log.append(
             (self.t, len(self.central_queue), self._active_counts()))
+        ser = self._series
+        if ser is not None and self.t % ser.cadence == 0:
+            ser.sample(self.t, self.views,
+                       {"central_queue": len(self.central_queue)})
         self.t += 1
 
     def run(self, workload: Sequence[Request], max_ticks: int = 1_000_000,
@@ -250,6 +303,11 @@ class Cluster(ClusterFrontend):
             e.on_finish = self._observe_finish
 
     # -- backend hooks -------------------------------------------------
+    def _bind_backend(self, tel):
+        if tel.trace is not None:
+            for i, e in enumerate(self.engines):
+                e.scheduler.bind_trace(tel.trace, i)
+
     def _submit(self, idx: int, req: Request):
         self.engines[idx].submit(req, getattr(req, "_prompt", None))
 

@@ -198,6 +198,10 @@ class Engine:
                 del self.by_slot[r.slot]
                 r.slot = None
                 self.next_token.pop(r.rid, None)
+                sched = self.scheduler
+                if sched.trace is not None:
+                    sched.trace.emit(t + 1, "complete", r.rid,
+                                     sched.trace_idx)
                 if self.on_finish is not None:
                     self.on_finish(r, t + 1)
             elif (r.stall_idx < len(r.stall_events)

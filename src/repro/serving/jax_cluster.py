@@ -50,6 +50,7 @@ from __future__ import annotations
 import os
 from collections import deque
 from functools import lru_cache, partial
+from time import perf_counter
 from typing import Optional, Sequence
 
 import numpy as np
@@ -107,7 +108,7 @@ _STATE_KEYS = ("q", "qh", "qn", "lanes", "lc", "pool", "pc", "minvr",
                "last")
 
 
-def _tick_core(G, L, QCAP, CAP, sfs, evcap, state, arr, t, S, thr):
+def _tick_core(G, L, QCAP, CAP, sfs, evcap, trace, state, arr, t, S, thr):
     """One tick of a G-engine homogeneous group, pure int32 array ops.
 
     Mirrors ``_VectorGroup.tick`` operation for operation: arrival
@@ -117,6 +118,13 @@ def _tick_core(G, L, QCAP, CAP, sfs, evcap, state, arr, t, S, thr):
     the monotone ``min_vruntime`` collapse, and key-sorted completion
     events (key = engine * 2L + lane for FILTER, + L + rank for CFS —
     the object cluster's replay order).
+
+    ``trace`` (static) additionally returns the store rows touched by
+    the intra-tick lifecycle transitions (FILTER admit, O x S bypass,
+    slice-expiry demotion, fair-share displacement) as -1-padded masks,
+    so the host can reconstruct the same lifecycle events the object
+    and vector backends emit inline (core/telemetry.py) — the masks are
+    captured *before* lane/pool compaction overwrites the rows.
     """
     import jax.numpy as jnp
 
@@ -168,6 +176,9 @@ def _tick_core(G, L, QCAP, CAP, sfs, evcap, state, arr, t, S, thr):
         examined = qvalid & (adm_before < free0[:, None])
         admit = examined & adm
         bypass = examined & byp
+        if trace:
+            tr_adm = jnp.where(admit, qq[..., _QROW], -1)
+            tr_byp = jnp.where(bypass, qq[..., _QROW], -1)
         zQ = jnp.zeros((G, QCAP), jnp.int32)
         lane_i = jnp.where(admit, lc[:, None] + adm_before, L)
         lrow = jnp.stack([qq[..., _QROW], qq[..., _QRID], qq[..., _QNTOK],
@@ -217,6 +228,8 @@ def _tick_core(G, L, QCAP, CAP, sfs, evcap, state, arr, t, S, thr):
     disp = (last >= 0) & sel[:, None] & eqp.any(-1) & ~in_ch
     dpos = jnp.where(disp, jnp.argmax(eqp, -1).astype(jnp.int32), CAP)
     pool = pool.at[gi[:, None], dpos, _PNCTX].add(one32, mode="drop")
+    if trace:
+        tr_pre = jnp.where(disp, last, -1)
     last = jnp.where(sel[:, None], jnp.where(ch, crows[..., _PROW], -1),
                      last)
     nact = lc + k
@@ -240,6 +253,8 @@ def _tick_core(G, L, QCAP, CAP, sfs, evcap, state, arr, t, S, thr):
                           zL + minvr[:, None], zL + 1, lanes[..., _LQD],
                           lanes[..., _LFS], lanes[..., _LQE], zL + 3,
                           lanes[..., _LSLC]], axis=-1)
+        if trace:
+            tr_dem = jnp.where(exp_f, lanes[..., _LROW], -1)
 
     # ---- pool compaction: drop CFS finishes, append demotes ----------
     fin_c = ch & (srv2 >= crows[..., _PNTOK] + 1)
@@ -316,6 +331,12 @@ def _tick_core(G, L, QCAP, CAP, sfs, evcap, state, arr, t, S, thr):
     out = {"events": ev,
            "scal": jnp.stack([n_ev, min_next]),
            "mirrors": jnp.stack([qn, lc, pc, nact, n_byp])}
+    if trace:
+        out["trace_pre"] = tr_pre
+        if sfs:
+            out["trace_adm"] = tr_adm
+            out["trace_byp"] = tr_byp
+            out["trace_dem"] = tr_dem
     return state, out
 
 
@@ -360,7 +381,7 @@ def _advance_core(G, L, CAP, sfs, state, g, t0):
 
 
 @lru_cache(maxsize=None)
-def _build_fns(G, L, QCAP, CAP, sfs):
+def _build_fns(G, L, QCAP, CAP, sfs, trace=False):
     """Jitted (step, scan, advance) for one group shape.  Cached
     module-wide so repeated growth and multiple same-shape groups reuse
     compilations."""
@@ -368,7 +389,8 @@ def _build_fns(G, L, QCAP, CAP, sfs):
     import jax.numpy as jnp
 
     evfull = G * L * (2 if sfs else 1)
-    step = jax.jit(partial(_tick_core, G, L, QCAP, CAP, sfs, evfull))
+    step = jax.jit(partial(_tick_core, G, L, QCAP, CAP, sfs, evfull,
+                           trace))
 
     evscan = _scan_evcap(G, L, sfs)
 
@@ -376,7 +398,9 @@ def _build_fns(G, L, QCAP, CAP, sfs):
         arr0 = jnp.full((1, _NA), -1, jnp.int32)
 
         def body(st, tt):
-            return _tick_core(G, L, QCAP, CAP, sfs, evscan,
+            # scan windows are only entered with telemetry traces off
+            # (JaxCluster._fast_forward), so the body never traces
+            return _tick_core(G, L, QCAP, CAP, sfs, evscan, False,
                               st, arr0, tt, S, thr)
 
         ts = t0 + jnp.arange(_SCAN_CHUNK, dtype=jnp.int32)
@@ -443,6 +467,9 @@ class _JaxGroup:
         # at 32 avoids a mid-run _grow (each growth re-jits three fns)
         self.CAP = max(32, 2 * lanes)
         self.ACAP = 256
+        # opt-in telemetry (core/telemetry.py); None = fully disabled
+        self.trace = None
+        self.prof = None
         self._state = self._fresh_state()
         self._batch: list = []          # (j, kind, row, rid, ntok)
         self._compile()
@@ -459,7 +486,17 @@ class _JaxGroup:
 
     def _compile(self):
         self._step_fn, self._scan_fn, self._adv_fn = _build_fns(
-            self.G, self.lanes, self.QCAP, self.CAP, self.policy == "sfs")
+            self.G, self.lanes, self.QCAP, self.CAP, self.policy == "sfs",
+            self.trace is not None)
+
+    def bind_telemetry(self, trace, prof):
+        """Attach trace/profile collectors; tracing re-jits the step to
+        the variant that also returns the lifecycle row masks."""
+        retrace = (trace is not None) != (self.trace is not None)
+        self.trace = trace
+        self.prof = prof
+        if retrace:
+            self._compile()
 
     def _grow(self, *, qcap=None, cap=None):
         """Resize a device region: pull, pad (unrolling the queue ring
@@ -510,6 +547,9 @@ class _JaxGroup:
                     and req.eta_hint > self.S[j]):
                 kind = 2
                 self.cfs_count[j] += 1
+                if self.trace is not None:
+                    # hinted demotion: straight to the fair-share pool
+                    self.trace.emit(t, "demote", req.rid, self.members[j])
             else:
                 kind = 0
                 self.qlen[j] += 1
@@ -591,6 +631,8 @@ class _JaxGroup:
             arr[:len(b), :5] = b
             arr[:len(b), 5] = pos
         qn_in = self.qlen.copy()
+        prof = self.prof
+        pt = perf_counter() if prof is not None else 0.0
         state, out = self._step_fn(
             self._state, arr, np.int32(t),
             self.S.astype(np.int32), self._thr32())
@@ -608,13 +650,38 @@ class _JaxGroup:
         self.n_active = nact
         self.lane_busy_ticks += nact
         self.overload_bypasses += nbyp
+        if prof is not None:
+            prof.add("jax_step", perf_counter() - pt)
+        if self.trace is not None:
+            self._emit_trace(out, t)
         if n_ev == 0:
             return []
         # pull the whole buffer and slice on the host: a device-side
         # ``[:n_ev]`` is an un-jitted slice whose output shape changes
         # every tick, so XLA would recompile it per distinct n_ev
+        pt = perf_counter() if prof is not None else 0.0
         ev = np.asarray(out["events"])[:n_ev].astype(np.int64)
-        return self._process_events(ev, t)
+        res = self._process_events(ev, t)
+        if prof is not None:
+            prof.add("jax_events", perf_counter() - pt)
+        return res
+
+    def _emit_trace(self, out, t: int):
+        """Reconstruct the lifecycle events the object/vector schedulers
+        emit inline from the device row masks (-1 = no event).  Order
+        within a tick is irrelevant — traces compare canonically sorted
+        (core/telemetry.py)."""
+        tr, st, mem = self.trace, self.store, self.members
+        keys = ([("admit", "trace_adm"), ("bypass", "trace_byp"),
+                 ("demote", "trace_dem")] if self.policy == "sfs" else [])
+        for kind, key in keys + [("preempt", "trace_pre")]:
+            a = np.asarray(out[key])
+            g, p = np.nonzero(a >= 0)
+            if g.size:
+                rows = a[g, p]
+                tr.emit_rows(t, kind,
+                             zip(st.rid[rows].tolist(),
+                                 [mem[x] for x in g.tolist()]))
 
     def _process_events(self, ev: np.ndarray, t: int) -> list:
         """Batched store write-back of finished rows + the (member,
@@ -637,6 +704,11 @@ class _JaxGroup:
         st.finish[rows] = t + 1
         np.add.at(self.free_slots, eng, 1)
         np.add.at(self.outstanding, eng, -1)
+        if self.trace is not None:
+            self.trace.emit_rows(
+                t + 1, "complete",
+                zip(st.rid[rows].tolist(),
+                    [self.members[g] for g in eng.tolist()]))
         return [(self.members[g], int(key - g * L2), int(row))
                 for g, key, row in zip(eng, ev[:, _EKEY], rows)]
 
@@ -832,18 +904,37 @@ class JaxCluster(ClusterFrontend):
         self._scan_cooldown = 0
 
     # -- backend hooks -------------------------------------------------
+    def _bind_backend(self, tel):
+        if tel.trace is not None or tel.profile is not None:
+            for g in self.groups:
+                g.bind_telemetry(tel.trace, tel.profile)
+
     def _submit(self, idx: int, req: Request):
         group, j = self._backend[idx]
         group.submit(j, req, self.t)
         self._cols.mark(idx)
 
+    def _observe_finish(self, req: Request, t: int):
+        # series completion counters are handled in _replay from the
+        # store columns — ``req`` is only written back at collect time,
+        # so its demoted/n_ctx fields are stale here
+        self.predictor.observe(req.func_id, req.service_demand)
+
     def _replay(self, events: list, t: int):
         """Merge per-group completion tuples into object-cluster order
         and drive the predictor feedback loop."""
         events.sort(key=lambda e: (e[0], e[1]))
+        ser = self._series
+        st = self.store
         for _member, _order, row in events:
             self._done_rows.append(row)
-            self._observe_finish(self.store.reqs[row], t + 1)
+            if ser is not None:
+                c = ser.counters
+                c["completions"] += 1
+                if st.demoted[row]:
+                    c["demoted_done"] += 1
+                c["nctx_done"] += int(st.n_ctx[row])
+            self._observe_finish(st.reqs[row], t + 1)
 
     def _step(self):
         events = []
@@ -863,7 +954,12 @@ class JaxCluster(ClusterFrontend):
         return len(self._done_rows)
 
     def _collect(self) -> list:
-        return self.store.write_back_many(self._done_rows)
+        prof = self._prof
+        pt = perf_counter() if prof is not None else 0.0
+        out = self.store.write_back_many(self._done_rows)
+        if prof is not None:
+            prof.add("jax_writeback", perf_counter() - pt)
+        return out
 
     # -- event-driven multi-tick batching ------------------------------
     def _gap_counts(self) -> tuple:
@@ -883,21 +979,39 @@ class JaxCluster(ClusterFrontend):
             return False
         gap = min(min(g.min_next for g in self.groups) - 1, window)
         if gap >= 1 and all(g.skip_valid() for g in self.groups):
+            # the gap advance is trace-safe: no event of any kind can
+            # occur inside the gap, so there is nothing to emit
+            prof = self._prof
+            pt = perf_counter() if prof is not None else 0.0
             counts = self._gap_counts()
             for group in self.groups:
                 group.advance(gap, self.t)
+            ser = self._series
             for dt in range(gap):
                 self.tick_log.append((self.t + dt, 0, counts))
+                if ser is not None and (self.t + dt) % ser.cadence == 0:
+                    # gauges are frozen across an event-free gap, so the
+                    # live views sample the exact per-tick values
+                    ser.sample(self.t + dt, self.views,
+                               {"central_queue": len(self.central_queue)})
             self.t += gap
             self._cols.mark_all()
+            if prof is not None:
+                prof.add("jax_advance", perf_counter() - pt)
             return True
+        # scan chunks skip the per-tick host loop, so they cannot emit
+        # trace events or series samples — fall back to per-tick
+        # stepping whenever either collector is live
         if (window >= _SCAN_CHUNK and self.t >= self._scan_cooldown
+                and self._trace is None and self._series is None
                 and not any(g.pending_len.any() for g in self.groups)):
             return self._scan_window()
         return False
 
     def _scan_window(self) -> bool:
         t0 = self.t
+        prof = self._prof
+        pt = perf_counter() if prof is not None else 0.0
         payloads = []
         for group in self.groups:
             ok, res = group.scan(t0)
@@ -906,8 +1020,13 @@ class JaxCluster(ClusterFrontend):
                 # nothing was committed anywhere — cool down until the
                 # per-tick path has stepped past the burst tick
                 self._scan_cooldown = t0 + res + 1
+                if prof is not None:
+                    prof.add("jax_scan", perf_counter() - pt)
                 return False
             payloads.append(res)
+        if prof is not None:
+            prof.add("jax_scan", perf_counter() - pt)
+            pt = perf_counter()
         per_group = [g.commit_scan(t0, p)
                      for g, p in zip(self.groups, payloads)]
         for i in range(_SCAN_CHUNK):
@@ -922,6 +1041,8 @@ class JaxCluster(ClusterFrontend):
             self.tick_log.append((t, 0, tuple(counts)))
         self.t = t0 + _SCAN_CHUNK
         self._cols.mark_all()
+        if prof is not None:
+            prof.add("jax_commit", perf_counter() - pt)
         return True
 
     def run(self, workload: Sequence[Request], max_ticks: int = 1_000_000,

@@ -58,6 +58,17 @@ class Scheduler:
     def __init__(self, lanes: int):
         self.lanes = lanes
         self.reqs: dict[int, Request] = {}
+        # opt-in lifecycle tracing (core/telemetry.py): None by default,
+        # every emission site is guarded so the disabled path costs one
+        # attribute read
+        self.trace = None
+        self.trace_idx = -1
+
+    def bind_trace(self, trace, idx: int):
+        """Attach a TraceRecorder; ``idx`` is this server's cluster
+        index, stamped on every emitted event."""
+        self.trace = trace
+        self.trace_idx = idx
 
     def on_arrival(self, req: Request, t: int):
         raise NotImplementedError
@@ -120,6 +131,8 @@ class FIFOScheduler(Scheduler):
             if r.first_start is None:
                 r.first_start = t
             self.running.append(rid)
+            if self.trace is not None:
+                self.trace.emit(t, "admit", rid, self.trace_idx)
         return list(self.running)
 
     def on_tick_end(self, rid: int, t: int, finished: bool):
@@ -131,6 +144,8 @@ class FIFOScheduler(Scheduler):
         if rid in self.running:
             self.running.remove(rid)
             self.reqs[rid].n_ctx += 1
+            if self.trace is not None:
+                self.trace.emit(t, "preempt", rid, self.trace_idx)
 
     def on_wake(self, rid: int, t: int):
         self.reqs[rid].queue_enter = t
@@ -172,6 +187,8 @@ class CFSScheduler(Scheduler):
         for rid in displaced:
             if rid in self.runnable:
                 self.reqs[rid].n_ctx += 1
+                if self.trace is not None:
+                    self.trace.emit(t, "preempt", rid, self.trace_idx)
         self._last = chosen
         return chosen
 
@@ -188,6 +205,8 @@ class CFSScheduler(Scheduler):
     def on_stall(self, rid: int, t: int):
         self.runnable.discard(rid)
         self.reqs[rid].n_ctx += 1
+        if self.trace is not None:
+            self.trace.emit(t, "preempt", rid, self.trace_idx)
 
     def on_wake(self, rid: int, t: int):
         r = self.reqs[rid]
@@ -233,6 +252,8 @@ class SRTFScheduler(Scheduler):
         for rid in set(self._last) - set(chosen):
             if rid in self.runnable:
                 self.reqs[rid].n_ctx += 1
+                if self.trace is not None:
+                    self.trace.emit(t, "preempt", rid, self.trace_idx)
         self._last = chosen
         return chosen
 
@@ -244,6 +265,8 @@ class SRTFScheduler(Scheduler):
     def on_stall(self, rid: int, t: int):
         self.runnable.discard(rid)
         self.reqs[rid].n_ctx += 1
+        if self.trace is not None:
+            self.trace.emit(t, "preempt", rid, self.trace_idx)
 
     def on_wake(self, rid: int, t: int):
         self.runnable.add(rid)
@@ -288,6 +311,10 @@ class SFSScheduler(Scheduler):
         self.slice_timeline = BoundedTimeline((0, self.S))
         self.overload_bypasses = 0
 
+    def bind_trace(self, trace, idx: int):
+        super().bind_trace(trace, idx)
+        self.cfs.bind_trace(trace, idx)     # shared reqs, same server
+
     # -- adaptive S (paper §V-C) --------------------------------------------
     def _observe(self, t: int):
         if self.fixed_slice is not None:
@@ -312,6 +339,8 @@ class SFSScheduler(Scheduler):
             # pool — saves the wasted slice S and the demotion switch
             req.demoted = True
             self.cfs.on_arrival(req, t)
+            if self.trace is not None:
+                self.trace.emit(t, "demote", req.rid, self.trace_idx)
             return
         req.queue_enter = t
         self.queue.append(req.rid)
@@ -332,10 +361,14 @@ class SFSScheduler(Scheduler):
                 r.demoted = True
                 self.cfs.runnable.add(rid)
                 r.vruntime = self.cfs.min_vruntime
+                if self.trace is not None:
+                    self.trace.emit(t, "bypass", rid, self.trace_idx)
                 continue
             if r.slice_left is None or r.slice_left <= 0:
                 r.slice_left = self.S
             self.filter_running.append(rid)
+            if self.trace is not None:
+                self.trace.emit(t, "admit", rid, self.trace_idx)
         # 2) leftover lanes run the CFS pool (work conservation)
         free = self.lanes - len(self.filter_running)
         self.cfs.lanes = free
@@ -355,6 +388,8 @@ class SFSScheduler(Scheduler):
                 r.demoted = True
                 r.vruntime = self.cfs.min_vruntime
                 self.cfs.runnable.add(rid)
+                if self.trace is not None:
+                    self.trace.emit(t, "demote", rid, self.trace_idx)
         else:
             self.cfs.on_tick_end(rid, t, finished)
 
@@ -364,6 +399,8 @@ class SFSScheduler(Scheduler):
             # §V-D: park it, keep the unused slice, re-enqueue on wake
             self.filter_running.remove(rid)
             r.n_ctx += 1
+            if self.trace is not None:
+                self.trace.emit(t, "preempt", rid, self.trace_idx)
             if not self.stall_aware:
                 # ablation: slice keeps burning while stalled
                 r.slice_left = 0

@@ -39,6 +39,7 @@ decoding — the vector backend is the synthetic scheduling mode only.
 from __future__ import annotations
 
 from collections import deque
+from time import perf_counter
 from typing import Optional, Sequence
 
 import numpy as np
@@ -210,6 +211,10 @@ class _VectorGroup:
         self.outstanding = np.zeros(G, np.int64)
         self.lane_busy_ticks = np.zeros(G, np.int64)
         self.n_active = np.zeros(G, np.int64)     # last tick's |chosen|
+        # opt-in lifecycle tracing (core/telemetry.py): the cluster sets
+        # this; every emission below is guarded so the disabled step
+        # stays allocation-free (tests/test_telemetry.py)
+        self.trace = None
 
     # -- fair-share pool plumbing --------------------------------------
     def _cfs_add(self, j: int, row: int):
@@ -266,6 +271,8 @@ class _VectorGroup:
             st.queue_enter[row] = t
             st.vruntime[row] = self.min_vruntime[j]
             self._cfs_add(j, row)
+            if self.trace is not None:
+                self.trace.emit(t, "demote", req.rid, self.members[j])
             return
         st.queue_enter[row] = t
         self.queue[j].append(row)
@@ -318,6 +325,9 @@ class _VectorGroup:
                     st.demoted[row] = True
                     st.vruntime[row] = self.min_vruntime[j]
                     self._cfs_add(j, row)
+                    if self.trace is not None:
+                        self.trace.emit(t, "bypass", int(st.rid[row]),
+                                        self.members[j])
                     continue
                 if not st.slice_set[row] or st.slice_left[row] <= 0:
                     st.slice_left[row] = S
@@ -325,6 +335,9 @@ class _VectorGroup:
                 self.filter_rids[j, self.filter_count[j]] = row
                 self.filter_count[j] += 1
                 st.in_filter[row] = True
+                if self.trace is not None:
+                    self.trace.emit(t, "admit", int(st.rid[row]),
+                                    self.members[j])
 
     def _cfs_select(self, t: int, free: np.ndarray):
         """Batched fair-share pick across the group (CFS semantics:
@@ -356,8 +369,16 @@ class _VectorGroup:
         st.mark[chosen_rows] = True
         le, lp = np.nonzero(sel[:, None] & (self.last_rows >= 0))
         lrows = self.last_rows[le, lp]
-        disp = lrows[~st.mark[lrows] & st.in_cfs[lrows]]
+        dmask = ~st.mark[lrows] & st.in_cfs[lrows]
+        disp = lrows[dmask]
         st.n_ctx[disp] += 1
+        if self.trace is not None and disp.size:
+            # engine index for each displaced row, gathered only when
+            # tracing: the disabled hot loop stays allocation-free
+            self.trace.emit_rows(
+                t, "preempt",
+                zip(st.rid[disp].tolist(),
+                    (np.asarray(self.members)[le[dmask]]).tolist()))
         st.mark[chosen_rows] = False
         # _last := chosen (only for engines whose select ran)
         self.last_rows[sel] = -1
@@ -409,9 +430,12 @@ class _VectorGroup:
                 st.in_filter[fin_rows] = False
                 np.add.at(self.free_slots, fin_eng, 1)
                 np.add.at(self.outstanding, fin_eng, -1)
+                tr = self.trace
                 for g, lane, row in zip(fin_eng, fin_lane, fin_rows):
-                    events.append((self.members[g], int(lane),
-                                   st.write_back(int(row))))
+                    req = st.write_back(int(row))
+                    if tr is not None:
+                        tr.emit(t + 1, "complete", req.rid, self.members[g])
+                    events.append((self.members[g], int(lane), req))
             drows = frows[exp_f]
             if drows.size:                 # demote to the fair-share pool
                 deng = fe[exp_f]
@@ -419,8 +443,12 @@ class _VectorGroup:
                 st.n_ctx[drows] += 1
                 st.demoted[drows] = True
                 st.vruntime[drows] = self.min_vruntime[deng]
+                tr = self.trace
                 for g, row in zip(deng, drows):
                     self._cfs_add(int(g), int(row))
+                    if tr is not None:
+                        tr.emit(t, "demote", int(st.rid[row]),
+                                self.members[g])
             rem = done_f | exp_f
             if rem.any():                  # stable lane compaction
                 self.filter_rids[fe[rem], fp[rem]] = -1
@@ -440,11 +468,14 @@ class _VectorGroup:
                 st.finish[fin_rows] = t + 1
                 np.add.at(self.free_slots, fin_eng, 1)
                 np.add.at(self.outstanding, fin_eng, -1)
+                tr = self.trace
                 for g, rk, row in zip(fin_eng, chosen_rank[done_c],
                                       fin_rows):
                     self._cfs_remove(int(g), int(row))
-                    events.append((self.members[g], L + int(rk),
-                                   st.write_back(int(row))))
+                    req = st.write_back(int(row))
+                    if tr is not None:
+                        tr.emit(t + 1, "complete", req.rid, self.members[g])
+                    events.append((self.members[g], L + int(rk), req))
             # min_vruntime: the object recurrence max(m0, min_i) over the
             # per-request updates is monotone, so it collapses to the min
             # over the end state — the surviving pool plus, if the LAST
@@ -590,6 +621,13 @@ class VectorCluster(ClusterFrontend):
         return cb
 
     # -- backend hooks -------------------------------------------------
+    def _bind_backend(self, tel):
+        if tel.trace is not None:
+            for g in self.groups:
+                g.trace = tel.trace
+            for idx, e in self.stragglers.items():
+                e.scheduler.bind_trace(tel.trace, idx)
+
     def _submit(self, idx: int, req: Request):
         b = self._backend[idx]
         if b is None:
@@ -600,6 +638,8 @@ class VectorCluster(ClusterFrontend):
         self._cols.mark(idx)
 
     def _step(self):
+        prof = self._prof
+        t0 = perf_counter() if prof is not None else 0.0
         events = []
         self._straggler_obs = []
         for idx, e in self.stragglers.items():
@@ -607,6 +647,9 @@ class VectorCluster(ClusterFrontend):
         events.extend(self._straggler_obs)
         for group in self.groups:
             events.extend(group.tick(self.t))
+        if prof is not None:
+            prof.add("group_step", perf_counter() - t0)
+            t0 = perf_counter()
         # replay completions in object-cluster order: server index
         # ascending, then each engine's chosen order — so learned
         # predictors see the exact same observation stream
@@ -616,6 +659,8 @@ class VectorCluster(ClusterFrontend):
                 self._done.append(req)
             self._observe_finish(req, self.t + 1)
         self._cols.mark_all()
+        if prof is not None:
+            prof.add("replay", perf_counter() - t0)
 
     def _active_counts(self) -> tuple:
         counts = [0] * self.n_servers

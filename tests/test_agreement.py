@@ -9,8 +9,10 @@ import pytest
 
 from repro.core import FaaSBenchConfig, SimConfig, generate, simulate
 from repro.core.metrics import result_bucket_stats
+from repro.core.simulator import Simulator
 from repro.core.spec import (ExperimentSpec, ServerSpec, TickWorkloadSpec,
                              run_experiment)
+from repro.core.telemetry import Telemetry, TraceRecorder
 from repro.serving import Engine, EngineConfig, Request
 
 SHORT_TICKS = 10          # tick-engine short bucket (tokens)
@@ -170,6 +172,83 @@ def test_jax_backend_bit_exact_on_cfs_group():
     jx = _run_backend("jax", servers, "least-outstanding", "oracle", wl)
     assert _full_fingerprint(vec.raw) == _full_fingerprint(jx.raw)
     assert vec.dispatch_counts == jx.dispatch_counts
+
+
+# ---------------------------------------------------------------------------
+# Telemetry trace agreement: equal-trace is strictly stronger than the
+# end-state fingerprints above — every intermediate scheduling decision
+# (route target + ETA, FILTER admit, demotion, preemption, completion
+# tick) must match, not just the final per-request fields.
+# ---------------------------------------------------------------------------
+
+
+def _run_traced(engine, servers, dispatch, predictor, wl):
+    tel = Telemetry(trace=True)
+    res = run_experiment(ExperimentSpec(
+        engine=engine, servers=servers, dispatch=dispatch,
+        predictor=predictor, workload=wl),
+        max_ticks=2_000_000, telemetry=tel)
+    return res, tel.trace
+
+
+@pytest.mark.parametrize("n_engines", [4, 64])
+def test_trace_agreement_tick_vector_jax(n_engines):
+    """The three tick-semantics backends emit the SAME canonical
+    lifecycle event stream, event for event, at n=4 and n=64."""
+    servers = tuple(ServerSpec(cores=4) for _ in range(n_engines))
+    wl = TickWorkloadSpec(n=400, load=1.0, seed=23)
+    canon, res0 = {}, None
+    for engine in ("tick", "vector", "jax"):
+        res, tr = _run_traced(engine, servers, "sfs-aware", "history", wl)
+        canon[engine] = tr.canonical()
+        res0 = res0 or res
+    assert canon["tick"] == canon["vector"]
+    assert canon["tick"] == canon["jax"]
+    counts = {}
+    for t, kind, rid, server, aux in canon["tick"]:
+        counts[kind] = counts.get(kind, 0) + 1
+    assert counts["arrival"] == counts["dispatch"] == res0.n
+    assert counts["complete"] == res0.n
+    assert counts["admit"] > 0                  # FILTER actually engaged
+
+
+def test_trace_agreement_covers_demote_and_preempt():
+    """Contention scenario (high load, hinted demotion) so the rarer
+    demote/preempt/bypass kinds are exercised — still equal-trace."""
+    servers = tuple(ServerSpec(cores=2, scheduler="sfs:hinted_demotion=True")
+                    for _ in range(4))
+    wl = TickWorkloadSpec(n=300, load=1.5, seed=11)
+    canon, counts = {}, None
+    for engine in ("tick", "vector", "jax"):
+        _, tr = _run_traced(engine, servers, "sfs-aware", "oracle", wl)
+        canon[engine] = tr.canonical()
+        counts = counts or tr.counts()
+    assert canon["tick"] == canon["vector"] == canon["jax"]
+    assert counts["demote"] > 0 and counts["preempt"] > 0
+
+
+def test_des_cluster_trace_matches_single_simulator():
+    """DES leg of the trace cross-check: a 1-server ClusterSimulator's
+    server-side events equal a bare Simulator fed the same requests —
+    the frontend adds arrival/dispatch but must not perturb the
+    per-server scheduling event stream."""
+    reqs = generate(FaaSBenchConfig(n_requests=1200, cores=4, load=1.0,
+                                    seed=7))
+    tel = Telemetry(trace=True)
+    res = run_experiment(ExperimentSpec(
+        engine="des", servers=(ServerSpec(cores=4),), dispatch="hash",
+        predictor="none"), requests=reqs, telemetry=tel)
+    server_kinds = {"admit", "bypass", "demote", "preempt", "complete"}
+    cluster_ev = [e for e in tel.trace.canonical()
+                  if e[1] in server_kinds]
+    tr = TraceRecorder()
+    sim = Simulator(reqs, SimConfig(cores=4, policy="sfs"))
+    sim.bind_trace(tr, 0)
+    sim.run()
+    assert cluster_ev == tr.canonical()
+    counts = tel.trace.counts()
+    assert counts["arrival"] == counts["dispatch"] == res.n
+    assert counts["complete"] == res.n
 
 
 def test_vector_and_des_agree_on_sfs_aware_headline():

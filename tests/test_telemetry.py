@@ -1,0 +1,236 @@
+"""Telemetry subsystem: recorder semantics, exporters, zero-overhead
+disabled path, fingerprint invariance, spec provenance round-trip, and
+the NaN-safe empty-array metrics fix (docs/OBSERVABILITY.md)."""
+import json
+import math
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import cdf, percentiles
+from repro.core.spec import (ExperimentSpec, ServerSpec, TickWorkloadSpec,
+                             run_experiment)
+from repro.core.telemetry import (KINDS, FleetSeries, HostProfile, Telemetry,
+                                  TelemetryConfig, TraceRecorder,
+                                  save_chrome_trace)
+from repro.core.workload import FaaSBenchConfig
+
+# ---------------------------------------------------------------------------
+# TraceRecorder
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_order_is_t_kind_rid_server():
+    tr = TraceRecorder()
+    tr.emit(5, "complete", 2, 1)
+    tr.emit(5, "arrival", 3)
+    tr.emit(1, "dispatch", 0, 0, aux=2.5)
+    tr.emit_rows(5, "admit", [(1, 0), (0, 1)])
+    kinds = [e[1] for e in tr.canonical()]
+    assert kinds == ["dispatch", "arrival", "admit", "admit", "complete"]
+    # within one (t, kind) block, rid ascending
+    admits = [e for e in tr.canonical() if e[1] == "admit"]
+    assert [e[2] for e in admits] == [0, 1]
+    assert tr.counts()["admit"] == 2 and tr.counts()["bypass"] == 0
+    assert tr.by_rid(0) == [(1, "dispatch", 0, 0, 2.5),
+                            (5, "admit", 0, 1, None)]
+
+
+def test_digest_is_emission_order_insensitive():
+    a, b = TraceRecorder(), TraceRecorder()
+    events = [(3, "admit", 1, 0), (1, "arrival", 1, -1),
+              (3, "complete", 0, 2), (2, "dispatch", 0, 2)]
+    for t, k, rid, s in events:
+        a.emit(t, k, rid, s)
+    for t, k, rid, s in reversed(events):
+        b.emit(t, k, rid, s)
+    assert a.digest() == b.digest()
+    b.emit(9, "preempt", 1, 0)
+    assert a.digest() != b.digest()
+
+
+def test_chrome_trace_export(tmp_path):
+    tr = TraceRecorder()
+    tr.emit(0, "arrival", 7)
+    tr.emit(2, "dispatch", 7, 1, aux=4.0)
+    tr.emit(3, "admit", 7, 1)
+    tr.emit(9, "complete", 7, 1)
+    path = save_chrome_trace(str(tmp_path / "t.json"), {"demo": tr})
+    data = json.load(open(path))
+    ev = data["traceEvents"]
+    spans = [e for e in ev if e["ph"] == "X"]
+    assert len(spans) == 1
+    assert spans[0]["ts"] == 2 and spans[0]["dur"] == 7
+    assert spans[0]["args"]["eta"] == 4.0
+    meta = {e["args"]["name"] for e in ev if e["ph"] == "M"}
+    assert {"demo", "server 1"} <= meta
+    assert any(e["ph"] == "i" and e["name"] == "admit" for e in ev)
+
+
+# ---------------------------------------------------------------------------
+# FleetSeries / HostProfile / Telemetry.ensure
+# ---------------------------------------------------------------------------
+
+
+class _FakeView:
+    lanes = 4
+
+    def queue_len(self):
+        return 3
+
+    def filter_free(self):
+        return 1
+
+    def fair_load(self):
+        return 2
+
+    def outstanding(self):
+        return 6
+
+
+def test_fleet_series_sample_and_summary():
+    ser = FleetSeries(cadence=10)
+    ser.count("completions", 5)
+    ser.sample(0, [_FakeView(), _FakeView()], {"central_queue": 4})
+    s = ser.summary()
+    assert s["n_samples"] == 1 and s["cadence"] == 10
+    assert s["peak_queue_len"] == 6 and s["mean_filter_active"] == 6
+    assert s["counters"]["completions"] == 5
+    assert ser.samples[0]["central_queue"] == 4
+    assert ser.to_dict()["samples"] is ser.samples
+
+
+def test_host_profile_accumulates_and_formats():
+    prof = HostProfile()
+    prof.add("step", 0.5)
+    prof.add("step", 0.25)
+    prof.add("route", 0.1)
+    s = prof.summary()
+    assert list(s) == ["step", "route"]          # sorted by total desc
+    assert s["step"]["calls"] == 2 and s["step"]["total_s"] == 0.75
+    assert "step" in prof.format() and "%" in prof.format()
+
+
+def test_telemetry_ensure_normalizes():
+    assert Telemetry.ensure(None) is None
+    tel = Telemetry(trace=True)
+    assert Telemetry.ensure(tel) is tel
+    t2 = Telemetry.ensure(True)
+    assert t2.trace is not None and t2.series is None and t2.profile is None
+    t3 = Telemetry.ensure(TelemetryConfig(series_cadence=5, profile=True))
+    assert t3.trace is None and t3.series.cadence == 5
+    assert t3.profile is not None
+    with pytest.raises(TypeError):
+        Telemetry.ensure("yes")
+    assert set(t2.summary()) == {"trace"}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: NaN-safe metrics on empty arrays
+# ---------------------------------------------------------------------------
+
+
+def test_percentiles_empty_returns_nans():
+    out = percentiles(np.array([]))
+    assert set(out) == {50, 90, 99, 99.9}
+    assert all(math.isnan(v) for v in out.values())
+    # and stays correct on the non-empty path
+    assert percentiles(np.array([1.0, 2.0, 3.0]))[50] == 2.0
+
+
+def test_cdf_empty_returns_empty():
+    xs, ys = cdf(np.array([]))
+    assert xs.size == 0 and ys.size == 0
+    xs, ys = cdf(np.array([3.0, 1.0, 2.0]), n=3)
+    assert list(xs) == [1.0, 2.0, 3.0] and ys[-1] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: fingerprints invariant, disabled path zero-cost
+# ---------------------------------------------------------------------------
+
+_SERVERS = tuple(ServerSpec(cores=4) for _ in range(4))
+_WL = TickWorkloadSpec(n=250, load=1.0, seed=23)
+
+
+def _spec(engine):
+    if engine == "des":
+        return ExperimentSpec(
+            engine="des", servers=_SERVERS, dispatch="sfs-aware",
+            workload=FaaSBenchConfig(n_requests=800, cores=16, load=1.0,
+                                     seed=7))
+    return ExperimentSpec(engine=engine, servers=_SERVERS,
+                          dispatch="sfs-aware", predictor="history",
+                          workload=_WL)
+
+
+@pytest.mark.parametrize("engine", ["tick", "vector", "jax", "des"])
+def test_enabling_telemetry_keeps_fingerprints_bit_exact(engine):
+    """Full telemetry (trace + series + profile) must be observation
+    only: the result fingerprint equals the telemetry-off run — even on
+    the jax backend, where tracing disables the scan fast path."""
+    base = run_experiment(_spec(engine), max_ticks=2_000_000)
+    tel = Telemetry(trace=True, series_cadence=50, profile=True)
+    res = run_experiment(_spec(engine), max_ticks=2_000_000, telemetry=tel)
+    assert base.fingerprint() == res.fingerprint()
+    assert res.telemetry is tel and base.telemetry is None
+    assert len(tel.trace) > 0 and len(tel.series.samples) > 0
+    counts = tel.trace.counts()
+    n = base.n
+    assert counts["arrival"] == counts["dispatch"] == n
+    assert counts["complete"] == n
+    assert tel.series.counters["completions"] == n
+    if engine != "des":     # host-path phase timers are tick-backend side
+        assert tel.profile.phases
+
+
+def test_disabled_telemetry_adds_zero_allocations_to_vector_step():
+    """With telemetry off, the hot loop must never touch telemetry.py:
+    every emission site is a single `is not None` attribute check, so
+    tracemalloc attributes zero allocations to the module."""
+    import repro.core.telemetry as tmod
+    run_experiment(_spec("vector"), max_ticks=2_000_000)   # warm caches
+    tracemalloc.start()
+    res = run_experiment(_spec("vector"), max_ticks=2_000_000)
+    snap = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    leaked = [s for s in snap.statistics("filename")
+              if s.traceback[0].filename == tmod.__file__]
+    assert res.telemetry is None
+    assert sum(s.size for s in leaked) == 0, leaked
+
+
+# ---------------------------------------------------------------------------
+# Satellite: spec provenance round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_round_trip_tick():
+    spec = ExperimentSpec(
+        engine="vector",
+        servers=(ServerSpec(cores=6),
+                 ServerSpec(cores=2, scheduler="cfs")),
+        dispatch="sfs-aware",
+        predictor="class:margin=1.5,boundary=0.6",
+        workload=TickWorkloadSpec(n=100, load=0.8, seed=3))
+    d = json.loads(json.dumps(spec.to_json()))      # through real JSON
+    assert ExperimentSpec.from_json(d) == spec
+
+
+def test_spec_json_round_trip_faas():
+    spec = ExperimentSpec(
+        engine="des", servers=(ServerSpec(cores=4),) * 2,
+        dispatch="least-outstanding", predictor="history",
+        workload=FaaSBenchConfig(n_requests=500, cores=8, load=1.1,
+                                 seed=13, iat="trace"))
+    d = json.loads(json.dumps(spec.to_json()))
+    back = ExperimentSpec.from_json(d)
+    assert back == spec
+    # nested tuples (duration_table rows, io_ms_range) must re-tuple
+    assert back.workload.duration_table == spec.workload.duration_table
+
+
+def test_all_kinds_have_an_order():
+    assert len(KINDS) == 7 and KINDS[0] == "arrival"
+    assert KINDS[-1] == "complete"
