@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast test-jax bench-smoke bench-predict bench-fleet \
-  bench bench-json bench-gate trace-demo
+.PHONY: test test-fast test-jax lint bench-smoke bench-predict \
+  bench-fleet bench bench-json bench-gate trace-demo
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -15,7 +15,12 @@ test-fast:
 	  tests/test_serving.py tests/test_cluster.py tests/test_agreement.py \
 	  tests/test_predict.py tests/test_spec.py \
 	  tests/test_vector_cluster.py tests/test_jax_cluster.py \
-	  tests/test_telemetry.py
+	  tests/test_telemetry.py tests/test_analysis.py
+
+# schedlint: determinism & jax hot-path static analysis over src/repro,
+# gated on the committed baseline (docs/ANALYSIS.md) — new findings fail
+lint:
+	$(PY) -m repro.analysis --baseline schedlint_baseline.json
 
 # jax-backend agreement + edge suites, pinned to the CPU backend (what
 # CI runs across the python-version matrix)

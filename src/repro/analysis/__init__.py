@@ -1,0 +1,68 @@
+"""schedlint — determinism & JAX hot-path static analysis (docs/ANALYSIS.md).
+
+The repo's load-bearing correctness claim — tick == vector == jax == DES
+event for event (``tests/test_agreement.py``) — lives in runtime tests,
+which only catch a nondeterminism bug on the seeds they run.  This
+package is the static layer in front of them: an AST-based pass suite
+over ``src/repro`` that flags the bug *classes* that break bit-exactness
+before any sweep runs.
+
+Four passes ship by default:
+
+* ``determinism`` — unseeded ``random``/``np.random`` global-state
+  calls, ``set`` iteration feeding ordered state, float ``==``,
+  ``id()``-based ordering, ``time.time()`` used for durations.
+* ``jax-hotpath`` — for functions statically reachable from a
+  ``jax.jit``/``lax.scan``/``pallas_call`` root (the jitted tick body in
+  ``serving/jax_cluster.py`` and the ``kernels/`` packages): host syncs
+  (``.item()``, ``float()`` on tracers, ``np.*``), Python branches on
+  traced values, and dtype/recompile hazards (float literals, missing
+  dtypes) that break the all-int32 discipline.
+* ``int32-overflow`` — products/accumulations of tick x lane x request
+  quantities narrowed to int32 in the array backends (1M requests x
+  1024 engines exceeds int32 fast).
+* ``telemetry-parity`` — all four backends emit the same set of the
+  seven lifecycle event kinds, every emission site carries the single
+  ``is not None`` guard, and every registered scheduler/dispatch/
+  predictor name is exercised under ``tests/``.
+
+Run it with ``python -m repro.analysis`` (or ``make lint``); findings
+are gated against the committed ``schedlint_baseline.json`` — new
+findings exit non-zero.  Suppress a deliberate site inline with
+``# schedlint: disable=<rule>`` or record it in the baseline with a
+reason.  This package imports only the standard library, so the lint CI
+job stays dependency-light.
+"""
+from repro.analysis.baseline import Baseline
+from repro.analysis.findings import Finding, Rule
+from repro.analysis.framework import (AnalysisPass, PASS_REGISTRY, Project,
+                                      load_project, register_pass)
+
+__all__ = ["AnalysisPass", "Baseline", "Finding", "PASS_REGISTRY",
+           "Project", "Rule", "load_project", "register_pass",
+           "run_analysis", "default_passes"]
+
+
+def default_passes():
+    """Instances of every registered pass, in registration order."""
+    import repro.analysis.passes  # noqa: F401  (registers the suite)
+    return [cls() for cls in PASS_REGISTRY.values()]
+
+
+def run_analysis(paths, passes=None):
+    """Load ``paths``, run ``passes`` (default: all), return the sorted
+    finding list with inline suppressions already applied, plus the
+    count of inline-suppressed findings: ``(findings, n_suppressed)``."""
+    project = load_project(paths)
+    findings = list(project.parse_failures)
+    for p in (passes if passes is not None else default_passes()):
+        findings.extend(p.run(project))
+    kept, suppressed = [], 0
+    for f in findings:
+        sf = project.file_by_path(f.path)
+        if sf is not None and sf.suppresses(f):
+            suppressed += 1
+        else:
+            kept.append(f)
+    kept.sort(key=lambda f: f.sort_key())
+    return kept, suppressed

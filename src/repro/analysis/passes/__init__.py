@@ -1,0 +1,4 @@
+"""The shipped pass suite — importing this module registers all four
+passes with :data:`repro.analysis.framework.PASS_REGISTRY`."""
+from repro.analysis.passes import (determinism, int32_overflow,  # noqa: F401
+                                   jax_hotpath, telemetry_parity)

@@ -1,0 +1,394 @@
+"""JAX hot-path pass: static checks on every function reachable from a
+jitted root.
+
+Roots are found syntactically: any function handed to a JAX transform
+(``jax.jit``, ``lax.scan``/``fori_loop``/``while_loop``/``cond``,
+``pl.pallas_call``, ``vmap``/``pmap``, decorator forms included,
+``functools.partial`` unwrapped).  From the roots a conservative call
+graph is grown: ``Name(...)`` calls resolve against nested defs, the
+module's top-level functions, then imports (with one-hop re-export
+chasing through ``__init__`` modules) — which is exactly how the jitted
+tick body in ``serving/jax_cluster.py`` reaches
+``kernels/group_pick``.
+
+Rules (all scoped to hot functions only)
+----------------------------------------
+* ``JAXHP-HOSTSYNC`` — ``.item()`` / ``.tolist()`` /
+  ``.block_until_ready()``, ``float()/int()/bool()`` on a non-literal,
+  or any ``np.*`` call: each one blocks on device->host transfer inside
+  the compiled region (or breaks tracing outright).
+* ``JAXHP-BRANCH`` — Python ``if``/``while``/``for`` over a *traced
+  local* (a name assigned from a ``jnp``/``lax`` expression in the same
+  function).  Branching on static arguments is fine and not flagged.
+* ``JAXHP-DTYPE`` — ``jnp.zeros/ones/empty/full/arange`` without an
+  explicit dtype: the float32 default silently promotes the all-int32
+  tick state and forces recompiles.
+* ``JAXHP-FLOATLIT`` — a float literal inside hot-path arithmetic:
+  Python floats promote traced int32 values to float32 (weak-type
+  promotion), a dtype + recompile hazard under the int32 discipline.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.findings import Rule
+from repro.analysis.framework import (AnalysisPass, call_head, dotted,
+                                      enclosing_functions, import_aliases,
+                                      register_pass, walk_no_nested)
+
+#: transform attribute names whose function arguments are traced
+TRANSFORMS = frozenset({
+    "jit", "pmap", "vmap", "pallas_call", "scan", "while_loop",
+    "fori_loop", "cond", "switch", "checkpoint", "remat", "custom_jvp",
+    "custom_vjp", "grad", "value_and_grad",
+})
+
+_JAX_MODULES = ("jax", "jax.numpy", "jax.lax", "jax.experimental.pallas",
+                "jax.experimental", "functools")
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+#: jnp array constructors -> number of positional args that includes an
+#: explicit dtype (``None`` = keyword-only)
+_DTYPE_POS = {"zeros": 2, "ones": 2, "empty": 2, "full": 3, "arange": None}
+
+
+class _FileInfo:
+    """Per-file lookup tables the resolver needs."""
+
+    def __init__(self, sfile):
+        self.sfile = sfile
+        self.modules, self.symbols = import_aliases(sfile.tree)
+        self.top_funcs = {n.name: n for n in sfile.tree.body
+                          if isinstance(n, _FUNC_NODES)}
+        #: aliases (local names) that refer to jax-family modules
+        self.jax_roots = {a for a, m in self.modules.items()
+                          if m == "jax" or m.startswith("jax.")}
+        self.jnp_roots = {a for a, m in self.modules.items()
+                          if m == "jax.numpy"}
+        self.np_roots = {a for a, m in self.modules.items()
+                         if m == "numpy"}
+        #: symbols imported straight off jax-family modules (jit, lax…)
+        self.jax_syms = {a for a, (m, s) in self.symbols.items()
+                         if m == "jax" or m.startswith("jax.")}
+
+
+@register_pass
+class JaxHotpathPass(AnalysisPass):
+    name = "jax-hotpath"
+    rules = (
+        Rule("JAXHP-HOSTSYNC", "error",
+             "host sync inside a jitted function"),
+        Rule("JAXHP-BRANCH", "error",
+             "python control flow on a traced value"),
+        Rule("JAXHP-DTYPE", "warning",
+             "array constructor without explicit dtype"),
+        Rule("JAXHP-FLOATLIT", "warning",
+             "float literal in int32 hot-path arithmetic"),
+    )
+
+    def run(self, project):
+        infos = {f: _FileInfo(f) for f in project.files}
+        hot = self._reachable(project, infos)
+        out = []
+        for fn_node, sfile in hot:
+            out.extend(self._check_function(fn_node, infos[sfile]))
+        return out
+
+    # -- call graph ------------------------------------------------------
+    def _reachable(self, project, infos):
+        """BFS the hot set from every transform root."""
+        hot: dict = {}            # fn node -> sfile (identity-keyed)
+        work: list = []
+
+        def add(fn_node, sfile):
+            if fn_node is not None and fn_node not in hot:
+                hot[fn_node] = sfile
+                work.append((fn_node, sfile))
+
+        for sfile in project.files:
+            info = infos[sfile]
+            for node in ast.walk(sfile.tree):
+                if isinstance(node, ast.Call) and self._is_transform(
+                        node, info):
+                    for arg in list(node.args) + [
+                            kw.value for kw in node.keywords]:
+                        for target, tf in self._unwrap(
+                                arg, node, sfile, project, infos):
+                            add(target, tf)
+                elif isinstance(node, _FUNC_NODES):
+                    # decorator forms: @jax.jit / @partial(jax.jit, ...)
+                    for dec in node.decorator_list:
+                        if self._decorator_is_transform(dec, info):
+                            add(node, sfile)
+                            break
+
+        while work:
+            fn_node, sfile = work.pop()
+            info = infos[sfile]
+            for node in walk_no_nested(fn_node):
+                if not isinstance(node, ast.Call):
+                    continue
+                resolved = self._resolve_call(node, fn_node, sfile,
+                                              project, infos)
+                if resolved is not None:
+                    add(*resolved)
+        return list(hot.items())
+
+    def _is_transform(self, call, info) -> bool:
+        head = call_head(call)
+        if not head:
+            return False
+        parts = head.split(".")
+        last = parts[-1]
+        if last not in TRANSFORMS:
+            return False
+        if len(parts) == 1:
+            return last in info.jax_syms
+        return parts[0] in info.jax_roots or parts[0] in ("jax", "lax",
+                                                          "pl")
+
+    def _decorator_is_transform(self, dec, info) -> bool:
+        nodes = [dec]
+        if isinstance(dec, ast.Call):
+            nodes = [dec.func] + list(dec.args)
+        for n in nodes:
+            head = dotted(n)
+            if not head:
+                continue
+            parts = head.split(".")
+            if parts[-1] in TRANSFORMS and (
+                    len(parts) > 1 and (parts[0] in info.jax_roots
+                                        or parts[0] in ("jax", "lax", "pl"))
+                    or (len(parts) == 1 and parts[0] in info.jax_syms)):
+                return True
+        return False
+
+    def _unwrap(self, arg, call, sfile, project, infos):
+        """Function nodes referenced by one transform argument."""
+        if isinstance(arg, ast.Lambda):
+            return [(arg, sfile)]
+        if isinstance(arg, ast.Call):
+            head = call_head(arg)
+            if head.split(".")[-1] == "partial":
+                out = []
+                for a in arg.args:
+                    out.extend(self._unwrap(a, call, sfile, project,
+                                            infos))
+                return out
+            return []
+        if isinstance(arg, (ast.Name, ast.Attribute)):
+            fake = ast.Call(func=arg, args=[], keywords=[])
+            fake._sl_parent = getattr(call, "_sl_parent", None)
+            # reuse the call resolver on a synthetic call at this site
+            scope = enclosing_functions(call)
+            resolved = self._resolve_head(dotted(arg), scope, sfile,
+                                          project, infos)
+            return [resolved] if resolved is not None else []
+        return []
+
+    def _resolve_call(self, call, current_fn, sfile, project, infos):
+        head = call_head(call)
+        if not head or "." in head and head.split(".")[0] not in \
+                infos[sfile].modules:
+            # method/attribute calls on objects are out of scope
+            if "." in head:
+                return None
+        scope = enclosing_functions(call) or [current_fn]
+        return self._resolve_head(head, scope, sfile, project, infos)
+
+    def _resolve_head(self, head, scope_chain, sfile, project, infos,
+                      _depth=0):
+        if not head or _depth > 8:
+            return None
+        info = infos[sfile]
+        parts = head.split(".")
+        if len(parts) == 1:
+            name = parts[0]
+            # nested defs of enclosing functions, innermost first
+            for fn in scope_chain:
+                body = getattr(fn, "body", [])
+                if not isinstance(body, list):
+                    continue
+                for stmt in body:
+                    if isinstance(stmt, _FUNC_NODES) and \
+                            stmt.name == name:
+                        return (stmt, sfile)
+            if name in info.top_funcs:
+                return (info.top_funcs[name], sfile)
+            if name in info.symbols:
+                mod, orig = info.symbols[name]
+                target = project.resolve_module(mod, sfile)
+                if target is not None:
+                    return self._resolve_symbol(target, orig, project,
+                                                infos, _depth + 1)
+            return None
+        # module.attr(...) via ``import module``
+        root, attr = parts[0], parts[-1]
+        if root in info.modules and len(parts) == 2:
+            target = project.resolve_module(info.modules[root], sfile)
+            if target is not None:
+                return self._resolve_symbol(target, attr, project, infos,
+                                            _depth + 1)
+        return None
+
+    def _resolve_symbol(self, mod_file, name, project, infos, depth):
+        if depth > 8:
+            return None
+        info = infos.get(mod_file)
+        if info is None:
+            info = infos[mod_file] = _FileInfo(mod_file)
+        if name in info.top_funcs:
+            return (info.top_funcs[name], mod_file)
+        if name in info.symbols:       # re-export (``__init__`` façades)
+            mod, orig = info.symbols[name]
+            target = project.resolve_module(mod, mod_file)
+            if target is not None:
+                return self._resolve_symbol(target, orig, project, infos,
+                                            depth + 1)
+        return None
+
+    # -- per-function checks --------------------------------------------
+    def _check_function(self, fn_node, info):
+        sfile = info.sfile
+        out = []
+        traced = self._traced_locals(fn_node, info)
+        label = getattr(fn_node, "name", "<lambda>")
+        for node in walk_no_nested(fn_node):
+            if isinstance(node, ast.Call):
+                out.extend(self._check_hot_call(node, sfile, info, label))
+            elif isinstance(node, (ast.If, ast.While)):
+                name = self._traced_name_in(node.test, traced)
+                if name is not None:
+                    out.append(self.finding(
+                        "JAXHP-BRANCH", sfile, node,
+                        f"python branch on traced value {name!r} in "
+                        f"jitted {label}(); use jnp.where/lax.cond — a "
+                        "concrete branch here is a TracerBoolConversion "
+                        "error or a silent recompile per value"))
+            elif isinstance(node, ast.For):
+                name = self._traced_name_in(node.iter, traced)
+                if name is not None:
+                    out.append(self.finding(
+                        "JAXHP-BRANCH", sfile, node,
+                        f"python loop over traced value {name!r} in "
+                        f"jitted {label}(); use lax.scan/fori_loop"))
+            elif isinstance(node, ast.BinOp):
+                for side, other in ((node.left, node.right),
+                                    (node.right, node.left)):
+                    if (isinstance(side, ast.Constant)
+                            and isinstance(side.value, float)
+                            and self._tracedish(other, traced, info)):
+                        out.append(self.finding(
+                            "JAXHP-FLOATLIT", sfile, side,
+                            f"float literal {side.value!r} meets a "
+                            f"traced value in jitted {label}(); weak-"
+                            "type promotion lifts int32 state to float "
+                            "(dtype/recompile hazard) — use an int or "
+                            "an explicit typed constant"))
+        return out
+
+    def _check_hot_call(self, node, sfile, info, label):
+        head = call_head(node)
+        parts = head.split(".") if head else []
+        out = []
+        # .item() / .tolist() / .block_until_ready() on anything
+        if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                "item", "tolist", "block_until_ready") and not node.args:
+            out.append(self.finding(
+                "JAXHP-HOSTSYNC", sfile, node,
+                f".{node.func.attr}() inside jitted {label}() forces a "
+                "device->host sync (or fails to trace); keep the value "
+                "on device"))
+        # float(x)/int(x)/bool(x) on non-literals
+        elif head in ("float", "int", "bool") and node.args and not \
+                isinstance(node.args[0], ast.Constant):
+            out.append(self.finding(
+                "JAXHP-HOSTSYNC", sfile, node,
+                f"{head}() on a traced value in jitted {label}() is a "
+                "concretization (host sync / TracerConversion error); "
+                "use jnp casts (.astype) instead"))
+        # any np.* call
+        elif parts and parts[0] in info.np_roots:
+            out.append(self.finding(
+                "JAXHP-HOSTSYNC", sfile, node,
+                f"numpy call {head}() inside jitted {label}() pulls the "
+                "tracer to host; use the jnp equivalent"))
+        # jnp constructors without dtype
+        elif (len(parts) == 2 and parts[0] in info.jnp_roots
+                and parts[1] in _DTYPE_POS):
+            npos = _DTYPE_POS[parts[1]]
+            has_kw = any(kw.arg == "dtype" for kw in node.keywords)
+            has_pos = npos is not None and len(node.args) >= npos
+            if not (has_kw or has_pos):
+                out.append(self.finding(
+                    "JAXHP-DTYPE", sfile, node,
+                    f"{head}() without an explicit dtype defaults to "
+                    "float; the tick state is all-int32 — pass "
+                    "dtype=jnp.int32 (weak-type promotion also "
+                    "recompiles)"))
+        return out
+
+    # -- traced-local inference -----------------------------------------
+    def _traced_locals(self, fn_node, info) -> set:
+        """Names assigned from jnp/lax expressions within this function
+        (single forward sweep; transitively through other locals)."""
+        traced: set = set()
+        jaxish = info.jnp_roots | info.jax_roots | {"jnp", "lax"}
+
+        def is_traced_expr(expr) -> bool:
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Name) and n.id in traced:
+                    return True
+                if isinstance(n, (ast.Call, ast.Attribute)):
+                    head = dotted(n if isinstance(n, ast.Attribute)
+                                  else n.func)
+                    if head and head.split(".")[0] in jaxish:
+                        return True
+            return False
+
+        body = getattr(fn_node, "body", [])
+        if not isinstance(body, list):
+            return traced
+        for stmt in body:
+            for node in walk_no_nested(stmt):
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)) \
+                        and node.value is not None:
+                    targets, value = [node.target], node.value
+                else:
+                    continue
+                if not is_traced_expr(value):
+                    continue
+                for t in targets:
+                    elts = t.elts if isinstance(
+                        t, (ast.Tuple, ast.List)) else [t]
+                    for e in elts:
+                        if isinstance(e, ast.Name):
+                            traced.add(e.id)
+        return traced
+
+    @staticmethod
+    def _tracedish(expr, traced, info) -> bool:
+        """Does this expression touch a traced value — a traced local
+        name, a jnp/lax call, or a function parameter attribute chain?
+        Pure-Python constant math (``1.0 / math.sqrt(D)``) is not it."""
+        jaxish = info.jnp_roots | info.jax_roots | {"jnp", "lax"}
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in traced:
+                return True
+            if isinstance(n, (ast.Call, ast.Attribute)):
+                head = dotted(n if isinstance(n, ast.Attribute)
+                              else n.func)
+                if head and head.split(".")[0] in jaxish:
+                    return True
+        return False
+
+    @staticmethod
+    def _traced_name_in(expr, traced):
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and n.id in traced:
+                return n.id
+        return None

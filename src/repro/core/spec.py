@@ -741,7 +741,7 @@ def run_experiment(spec: ExperimentSpec, requests=None, *,
     if telemetry is not None and telemetry is not False:
         from repro.core.telemetry import Telemetry
         tel = Telemetry.ensure(telemetry)
-    t0 = time.time()
+    t0 = time.perf_counter()
     if spec.engine == "des":
         return _run_des(spec, requests, t0, tel)
     return _run_tick(spec, requests, t0, max_ticks, tel)
@@ -791,7 +791,7 @@ def _run_des(spec: ExperimentSpec, requests, t0: float,
         dispatch_counts=list(res.dispatch_counts),
         overload_bypasses=res.overload_bypasses,
         eta_log=dict(res.eta_log), dispatch_S=res.dispatch_S,
-        wall_s=time.time() - t0, raw=res, telemetry=tel)
+        wall_s=time.perf_counter() - t0, raw=res, telemetry=tel)
 
 
 def _run_tick(spec: ExperimentSpec, requests, t0: float,
@@ -822,4 +822,4 @@ def _run_tick(spec: ExperimentSpec, requests, t0: float,
         overload_bypasses=cluster.summary()["overload_bypasses"],
         eta_log=dict(cluster.eta_log),
         dispatch_S=getattr(cluster.policy, "S", None),
-        wall_s=time.time() - t0, raw=done, telemetry=tel)
+        wall_s=time.perf_counter() - t0, raw=done, telemetry=tel)

@@ -245,16 +245,16 @@ def build_cell(cfg: ModelConfig, shape_name: str, mesh,
 
 def _compile_and_measure(cfg: ModelConfig, shape_name: str, mesh,
                          grad_compression: str | None = None) -> dict:
-    t0 = time.time()
+    t0 = time.perf_counter()
     plan, fn, args, in_sh, donate = build_cell(cfg, shape_name, mesh,
                                                grad_compression)
     with use_plan(plan), mesh:
         jf = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
         lowered = jf.lower(*args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
         hlo = compiled.as_text()

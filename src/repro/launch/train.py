@@ -91,7 +91,7 @@ def main(argv=None):
                           on_timeout=lambda s, dt: print(
                               f"!! step {s} straggling ({dt:.0f}s)"))
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         for i in range(start, args.steps):
             batch = next(it)
             with wd.step(i):
@@ -99,11 +99,11 @@ def main(argv=None):
             if (i + 1) % args.log_every == 0 or i == start:
                 l = float(metrics["loss"])
                 gn = float(metrics["grad_norm"])
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 tput = dc.global_batch * dc.seq_len * args.log_every / dt
                 print(f"step {i+1:5d}  loss {l:.4f}  |g| {gn:.3f}  "
                       f"{tput:,.0f} tok/s", flush=True)
-                t0 = time.time()
+                t0 = time.perf_counter()
             if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
                 saver.save(state, args.ckpt_dir, i + 1,
                            extra=it.state_dict())

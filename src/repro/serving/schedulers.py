@@ -183,7 +183,7 @@ class CFSScheduler(Scheduler):
                 r.queue_delay += t - r.queue_enter
         # context switch accounting: a request that ran last tick but was
         # displaced this tick was preempted (lane re-formation)
-        displaced = set(self._last) - set(chosen)
+        displaced = sorted(set(self._last) - set(chosen))
         for rid in displaced:
             if rid in self.runnable:
                 self.reqs[rid].n_ctx += 1
@@ -249,7 +249,7 @@ class SRTFScheduler(Scheduler):
             if r.first_start is None:
                 r.first_start = t
                 r.queue_delay += t - r.queue_enter
-        for rid in set(self._last) - set(chosen):
+        for rid in sorted(set(self._last) - set(chosen)):
             if rid in self.runnable:
                 self.reqs[rid].n_ctx += 1
                 if self.trace is not None:

@@ -1,0 +1,39 @@
+"""Determinism-pass fixture: every rule fires at a marked line.
+
+Parsed by schedlint in the tests, never imported — the ``# expect:``
+markers are what test_analysis.py asserts against.
+"""
+import random
+import time
+
+import numpy as np
+
+
+def unseeded_draws(n):
+    vals = [random.random() for _ in range(n)]    # expect: DET-SEED
+    np.random.shuffle(vals)                       # expect: DET-SEED
+    return vals
+
+
+def hash_order_feed(ready, done):
+    pending = set(ready) - set(done)
+    order = []
+    for rid in pending:                           # expect: DET-SET-ITER
+        order.append(rid)
+    extra = [r for r in {1, 2, 3}]                # expect: DET-SET-ITER
+    return order + extra
+
+
+def float_predicate(x):
+    if x == 0.1:                                  # expect: DET-FLOAT-EQ
+        return True
+    return False
+
+
+def identity_order(jobs):
+    return sorted(jobs, key=lambda j: id(j))      # expect: DET-ID-ORDER
+
+
+def wall_clock_duration():
+    t0 = time.time()                              # expect: DET-WALLCLOCK
+    return t0

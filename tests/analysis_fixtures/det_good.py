@@ -1,0 +1,34 @@
+"""Determinism-pass fixture: the clean twin of det_bad.py — the same
+shapes done right must produce zero findings."""
+import time
+
+import numpy as np
+
+
+def seeded_draws(n, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = rng.random(n).tolist()
+    rng.shuffle(vals)
+    return vals
+
+
+def sorted_feed(ready, done):
+    pending = sorted(set(ready) - set(done))
+    order = []
+    for rid in pending:
+        order.append(rid)
+    extra = list(sorted({1, 2, 3}))
+    return order + extra
+
+
+def tolerant_predicate(x):
+    return abs(x - 0.1) < 1e-9
+
+
+def stable_order(jobs):
+    return sorted(jobs, key=lambda j: j.rid)
+
+
+def monotonic_duration():
+    t0 = time.perf_counter()
+    return time.perf_counter() - t0

@@ -1,0 +1,20 @@
+"""Suppression fixture: the same violations as det_bad.py, silenced
+with inline ``# schedlint: disable=`` comments — must report zero
+findings but a non-zero suppressed count."""
+import time
+
+
+def stamped_run_dir():
+    # a real timestamp is wanted here, not a duration
+    return f"run-{time.time():.0f}"  # schedlint: disable=DET-WALLCLOCK
+
+
+def drain(pending):
+    out = []
+    for rid in set(pending):  # schedlint: disable=DET-SET-ITER
+        out.append(rid)
+    return out
+
+
+def anything_goes(x):
+    return x == 0.5  # schedlint: disable=all

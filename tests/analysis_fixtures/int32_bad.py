@@ -1,0 +1,16 @@
+"""int32-overflow fixture (scanned with scope=("analysis_fixtures/",)):
+arithmetic narrowed to int32 plus a scale-product accumulator."""
+import numpy as np
+
+
+def truncating_cast(ticks, lanes):
+    return np.cumsum(ticks * lanes).astype(np.int32)  # expect: INT32-CAST
+
+
+def truncating_constructor(tick_count, row_count):
+    return np.int32(tick_count * row_count)       # expect: INT32-CAST
+
+
+def accumulate(vruntime, slice_ticks, lane_weight):
+    vruntime += slice_ticks * lane_weight         # expect: INT32-PROD
+    return vruntime

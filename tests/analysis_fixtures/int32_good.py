@@ -1,0 +1,17 @@
+"""int32-overflow fixture: clean twin — clamped casts, widened
+accumulators, no findings."""
+import numpy as np
+
+_IMAX = np.iinfo(np.int32).max
+
+
+def clamped_cast(ticks):
+    # no arithmetic under the cast: the clamp result is cast directly
+    bounded = np.minimum(ticks, _IMAX)
+    return bounded.astype(np.int32)
+
+
+def widened_accumulate(vruntime64, slice_ticks, lane_weight):
+    prod = np.int64(slice_ticks) * lane_weight
+    vruntime64 += prod
+    return vruntime64

@@ -1,0 +1,32 @@
+"""JAX hot-path fixture: a jitted tick body (plus a helper it calls)
+committing every hot-path sin.  Self-contained — schedlint resolves the
+call graph statically, nothing here ever runs."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def helper(x):
+    # reachable from the jitted root through the call below
+    return np.maximum(x, 0)                       # expect: JAXHP-HOSTSYNC
+
+
+@partial(jax.jit, static_argnames=("n",))
+def tick(state, n):
+    total = jnp.sum(state)
+    if total > 0:                                 # expect: JAXHP-BRANCH
+        state = state + 1
+    flag = float(total)                           # expect: JAXHP-HOSTSYNC
+    buf = jnp.zeros(n)                            # expect: JAXHP-DTYPE
+    scaled = total * 0.5                          # expect: JAXHP-FLOATLIT
+    host = total.item()                           # expect: JAXHP-HOSTSYNC
+    return helper(state), buf, flag, scaled, host
+
+
+def cold_path(x):
+    # NOT reachable from any transform root: none of this is flagged
+    if x > 0:
+        return float(x) * 0.5
+    return np.maximum(x, 0).item()

@@ -1,0 +1,28 @@
+"""JAX hot-path fixture: the clean twin of jax_bad.py — device-side
+idiom throughout, zero findings expected."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def helper(x):
+    return jnp.maximum(x, 0)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def tick(state, n):
+    total = jnp.sum(state)
+    state = jnp.where(total > 0, state + 1, state)
+    buf = jnp.zeros(n, dtype=jnp.int32)
+    scaled = total * 2
+    return helper(state), buf, scaled
+
+
+def scan_step(carry, x):
+    return carry + x, carry
+
+
+def run(xs):
+    # lax.scan root: scan_step is hot and must also stay clean
+    return jax.lax.scan(scan_step, jnp.int32(0), xs)

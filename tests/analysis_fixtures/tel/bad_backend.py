@@ -1,0 +1,10 @@
+"""Fixture backend that never emits 'complete' and skips the guard."""
+
+
+class BadBackend:
+    def __init__(self, trace=None):
+        self.trace = trace
+
+    def step(self, t, rid):
+        self.trace.emit(t, "arrival", rid)        # expect: TEL-GUARD
+# whole backend: no 'complete' emission anywhere  # expect: TEL-KINDS

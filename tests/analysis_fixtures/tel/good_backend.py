@@ -1,0 +1,16 @@
+"""Fixture backend that emits every kind, fully guarded."""
+
+
+class GoodBackend:
+    def __init__(self, trace=None):
+        self.trace = trace
+
+    def step(self, t, rid):
+        if self.trace is not None:
+            self.trace.emit(t, "arrival", rid)
+
+    def finish(self, t, rows):
+        tr = self.trace
+        if tr is None:
+            return
+        tr.emit_rows(t, "complete", rows)

@@ -1,0 +1,2 @@
+"""Miniature telemetry contract for the telemetry-parity fixture."""
+KINDS = ("arrival", "complete")

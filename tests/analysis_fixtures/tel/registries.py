@@ -1,0 +1,21 @@
+"""Fixture registry: one exercised name, one orphan."""
+
+
+class _Reg:
+    def register(self, name):
+        def deco(fn):
+            return fn
+        return deco
+
+
+FIXTURE_REGISTRY = _Reg()
+
+
+@FIXTURE_REGISTRY.register("covered-policy")
+def covered():
+    return "covered"
+
+
+@FIXTURE_REGISTRY.register("orphan-policy")   # expect: TEL-REGISTRY
+def orphan():
+    return "orphan"

@@ -1,0 +1,3 @@
+"""Stands in for the repo's tests/ tree: mentions the covered name so
+it counts as exercised, and stays silent about the orphan."""
+EXERCISED = ["covered-policy"]

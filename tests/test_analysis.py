@@ -1,0 +1,218 @@
+"""schedlint suite tests: every pass proven against its fixture twin
+(`# expect: RULE` markers in tests/analysis_fixtures/), plus the CLI
+baseline-gating round trip and a whole-repo regression scan."""
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_analysis
+from repro.analysis.cli import main
+from repro.analysis.passes.determinism import DeterminismPass
+from repro.analysis.passes.int32_overflow import Int32OverflowPass
+from repro.analysis.passes.jax_hotpath import JaxHotpathPass
+from repro.analysis.passes.telemetry_parity import TelemetryParityPass
+
+FIX = Path(__file__).parent / "analysis_fixtures"
+SRC = Path(__file__).parents[1] / "src" / "repro"
+
+EXPECT_RE = re.compile(r"#\s*expect:\s*([A-Z0-9-]+)")
+
+
+def expected_markers(path):
+    """{(rule, line)} parsed from ``# expect: RULE`` comments."""
+    out = set()
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        for rule in EXPECT_RE.findall(line):
+            out.add((rule, i))
+    return out
+
+
+def found(findings):
+    return {(f.rule, f.line) for f in findings}
+
+
+# -- determinism -----------------------------------------------------------
+
+def test_determinism_bad_matches_markers():
+    findings, _ = run_analysis([FIX / "det_bad.py"], [DeterminismPass()])
+    assert found(findings) == expected_markers(FIX / "det_bad.py")
+
+
+def test_determinism_good_is_clean():
+    findings, suppressed = run_analysis([FIX / "det_good.py"],
+                                        [DeterminismPass()])
+    assert findings == [] and suppressed == 0
+
+
+def test_inline_suppressions_silence_and_count():
+    findings, suppressed = run_analysis([FIX / "det_suppressed.py"],
+                                        [DeterminismPass()])
+    assert findings == []
+    assert suppressed == 3
+
+
+# -- jax hot path ----------------------------------------------------------
+
+def test_jax_bad_matches_markers():
+    findings, _ = run_analysis([FIX / "jax_bad.py"], [JaxHotpathPass()])
+    assert found(findings) == expected_markers(FIX / "jax_bad.py")
+
+
+def test_jax_cold_path_not_flagged():
+    findings, _ = run_analysis([FIX / "jax_bad.py"], [JaxHotpathPass()])
+    cold_start = (FIX / "jax_bad.py").read_text().splitlines().index(
+        "def cold_path(x):") + 1
+    assert all(f.line < cold_start for f in findings)
+
+
+def test_jax_good_is_clean():
+    findings, _ = run_analysis([FIX / "jax_good.py"], [JaxHotpathPass()])
+    assert findings == []
+
+
+# -- int32 overflow --------------------------------------------------------
+
+def test_int32_bad_matches_markers():
+    p = Int32OverflowPass(scope=("analysis_fixtures/",))
+    findings, _ = run_analysis([FIX / "int32_bad.py"], [p])
+    assert found(findings) == expected_markers(FIX / "int32_bad.py")
+
+
+def test_int32_good_is_clean():
+    p = Int32OverflowPass(scope=("analysis_fixtures/",))
+    findings, _ = run_analysis([FIX / "int32_good.py"], [p])
+    assert findings == []
+
+
+def test_int32_out_of_scope_files_skipped():
+    findings, _ = run_analysis([FIX / "int32_bad.py"],
+                               [Int32OverflowPass()])   # default scope
+    assert findings == []
+
+
+# -- telemetry parity ------------------------------------------------------
+
+def _tel_pass():
+    return TelemetryParityPass(
+        kinds_file="tel/kinds.py",
+        backends={"good": ("tel/good_backend.py",),
+                  "bad": ("tel/bad_backend.py",)},
+        tests_dir=FIX / "tel" / "tests")
+
+
+def test_telemetry_missing_kind_and_guard():
+    findings, _ = run_analysis([FIX / "tel"], [_tel_pass()])
+    by_rule = {}
+    for f in findings:
+        by_rule.setdefault(f.rule, []).append(f)
+    assert len(by_rule["TEL-KINDS"]) == 1
+    assert "complete" in by_rule["TEL-KINDS"][0].message
+    assert "bad" in by_rule["TEL-KINDS"][0].message
+    guard_marker = expected_markers(FIX / "tel" / "bad_backend.py")
+    assert {("TEL-GUARD", f.line) for f in by_rule["TEL-GUARD"]} == {
+        m for m in guard_marker if m[0] == "TEL-GUARD"}
+
+
+def test_telemetry_registry_orphan():
+    findings, _ = run_analysis([FIX / "tel"], [_tel_pass()])
+    orphans = [f for f in findings if f.rule == "TEL-REGISTRY"]
+    assert len(orphans) == 1
+    assert "orphan-policy" in orphans[0].message
+    assert all("covered-policy" not in f.message for f in orphans)
+
+
+# -- framework behaviour ---------------------------------------------------
+
+def test_syntax_error_becomes_parse_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    findings, _ = run_analysis([bad], [DeterminismPass()])
+    assert [f.rule for f in findings] == ["PARSE"]
+
+
+# -- whole-repo regression -------------------------------------------------
+
+def test_repo_scan_has_no_errors():
+    """src/repro must stay free of error-severity findings; the
+    remaining warnings are pinned in schedlint_baseline.json."""
+    findings, _ = run_analysis([SRC])
+    errors = [f for f in findings if f.severity == "error"]
+    assert errors == [], "\n".join(f.format() for f in errors)
+
+
+def test_repo_scan_matches_committed_baseline():
+    from repro.analysis.baseline import Baseline
+    bl_path = SRC.parents[1] / "schedlint_baseline.json"
+    assert bl_path.exists(), "schedlint_baseline.json must be committed"
+    findings, _ = run_analysis([SRC])
+    new, _, _ = Baseline.load(bl_path).compare(findings)
+    assert new == [], "\n".join(f.format() for f in new)
+    entries = json.loads(bl_path.read_text())["entries"]
+    assert all("TODO" not in e["reason"] for e in entries), \
+        "every baseline entry needs a real reason"
+
+
+# -- CLI -------------------------------------------------------------------
+
+@pytest.fixture()
+def violation_dir(tmp_path):
+    (tmp_path / "code.py").write_text(
+        "import random\n\n\ndef f():\n    return random.random()\n")
+    return tmp_path
+
+
+def test_cli_exit_codes_without_baseline(violation_dir, tmp_path, capsys):
+    assert main([str(violation_dir)]) == 1
+    clean = tmp_path / "clean.py"
+    clean.write_text("def f():\n    return 1\n")
+    assert main([str(clean)]) == 0
+    capsys.readouterr()
+
+
+def test_cli_baseline_round_trip(violation_dir, capsys):
+    bl = violation_dir / "baseline.json"
+    code = violation_dir / "code.py"
+    # 1. accept the current findings
+    assert main([str(code), "--baseline", str(bl),
+                 "--update-baseline"]) == 0
+    # 2. gated run is now clean
+    assert main([str(code), "--baseline", str(bl)]) == 0
+    # 3. a fresh violation fails the gate
+    code.write_text(code.read_text()
+                    + "\n\ndef g(jobs):\n    return id(jobs)\n")
+    assert main([str(code), "--baseline", str(bl)]) == 1
+    out = capsys.readouterr().out
+    assert "DET-ID-ORDER" in out and "(new)" in out
+    # 4. fixing everything leaves stale entries: reported, not fatal
+    code.write_text("def f():\n    return 1\n")
+    assert main([str(code), "--baseline", str(bl)]) == 0
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_cli_json_report(violation_dir, capsys):
+    report = violation_dir / "report.json"
+    assert main([str(violation_dir / "code.py"),
+                 "--json", str(report)]) == 1
+    body = json.loads(report.read_text())
+    assert body["summary"]["total"] == 1
+    assert body["findings"][0]["rule"] == "DET-SEED"
+    capsys.readouterr()
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("DET-SEED", "JAXHP-HOSTSYNC", "INT32-CAST",
+                 "TEL-KINDS"):
+        assert rule in out
+
+
+def test_cli_select_pass(violation_dir, capsys):
+    # int32-overflow alone cannot see the DET-SEED violation
+    assert main([str(violation_dir / "code.py"),
+                 "--select", "int32-overflow"]) == 0
+    assert main([str(violation_dir / "code.py"),
+                 "--select", "nope"]) == 2
+    capsys.readouterr()
