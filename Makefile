@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-jax lint bench-smoke bench-predict \
-  bench-fleet bench bench-json bench-gate trace-demo
+  bench-fleet bench-elastic bench bench-json bench-gate trace-demo
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -42,12 +42,19 @@ bench-predict:
 bench-fleet:
 	$(PY) benchmarks/cluster_sweep.py --fleet1024
 
+# <60 s lifecycle scenario: cold starts + keep-alive, flash crowd,
+# failure/drain and autoscaling at once (asserts the short-P99 headline
+# survives elasticity; docs/CLUSTER.md "Production realism")
+bench-elastic:
+	$(PY) benchmarks/cluster_sweep.py --elastic
+
 # CI perf trajectory: smoke cluster+predict suites with machine-readable
 # BENCH_*.json output (uploaded as artifacts), then the regression gate
-# against benchmarks/baselines/.  fleet1024 runs first so its artifact
-# is fresh when the cluster suite distills BENCH_cluster.json.
+# against benchmarks/baselines/.  fleet1024 and elastic run first so
+# their artifacts are fresh when the cluster suite distills
+# BENCH_cluster.json.
 bench-json:
-	$(PY) -m benchmarks.run --smoke --json fleet1024 cluster predict
+	$(PY) -m benchmarks.run --smoke --json fleet1024 elastic cluster predict
 
 bench-gate:
 	$(PY) benchmarks/check_regression.py

@@ -81,11 +81,14 @@ MIXED_SERVERS = (ServerSpec(cores=6), ServerSpec(cores=6),
 
 def run_tick(policy: str, servers: tuple, load: float, *, n: int,
              seed: int, scenario: str = "uniform",
-             backend: str = "tick") -> dict:
+             backend: str = "tick", workload: str = None,
+             lifecycle: str = None, scaling: str = None) -> dict:
     from repro.core.telemetry import Telemetry
     spec = ExperimentSpec(
         engine=backend, servers=servers, dispatch=policy,
-        workload=TickWorkloadSpec(n=n, load=load, seed=seed))
+        workload=(workload if workload is not None
+                  else TickWorkloadSpec(n=n, load=load, seed=seed)),
+        lifecycle=lifecycle, scaling=scaling)
     # profile-only telemetry keeps every fast path (gap advance + scan
     # windows) live, so the phase breakdown rides along at no perf cost
     tel = Telemetry(profile=True)
@@ -196,6 +199,40 @@ def run_fleet1024(n: int) -> list:
     return rows
 
 
+def run_elastic(n: int) -> list:
+    """``--elastic``: the production-realism scenario (docs/CLUSTER.md
+    "Production realism") — 16 engines x 4 lanes through the vector
+    backend with the full lifecycle stack on: Zipf function popularity
+    feeding per-function cold starts under keep-alive/cap, a flash
+    crowd compressing the middle of the arrival stream 2x, one server
+    failing (drain + requeue) after the crowd passes, and an autoscaler
+    growing the active set from ``min=12`` into the spike and shrinking
+    back out of it.  sfs-aware vs hash, loads 0.6 / 0.8; its rows join
+    the gated BENCH_cluster.json family and the headline check applies
+    at 0.8 — short P99 must survive elasticity, not just the steady
+    state.  The failure lands after the flash drains: a server loss
+    *inside* a 2x crowd puts the 0.8 cell in queue-explosion territory
+    where p99 is backlog noise for both policies (same reason the full
+    sweep's 2-engine load-1.0 cells are not hard-gated)."""
+    servers = uniform_servers(16, 4)
+    rows = []
+    for load in (0.6, 0.8):
+        wl = (f"bimodal:n={n},seed=7,load={load}|zipf:funcs=16,s=1.1"
+              f"|flash:at=1000,x=2,dur=1000")
+        print(f"tick-engine ELASTIC (vector backend): engines=16 lanes=4 "
+              f"load={load} n={n}")
+        for pol in ("sfs-aware", "hash"):
+            r = run_tick(
+                pol, servers, load, n=n, seed=7, scenario="elastic",
+                backend="vector", workload=wl,
+                lifecycle="lifecycle:cold=2,ttl=400,cap=8,"
+                          "fail=2600,fail_server=3",
+                scaling="scale:min=12,T=25,up=0.6,down=0.15,step=2")
+            rows.append(r)
+            print_row(r, SHORT_LABEL)
+    return rows
+
+
 def run_trace_demo(out_path: str, n: int) -> int:
     """``--trace``: render one sfs-aware-vs-hash lifecycle trace of the
     fleet64 smoke scenario (64 engines x 4 lanes, vector backend, load
@@ -227,6 +264,10 @@ def main(argv=None):
     ap.add_argument("--fleet1024", action="store_true",
                     help="run ONLY the 1024-engine jax-backend scenario "
                          "(own <60 s budget; asserts its headline claim)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="run ONLY the lifecycle scenario (cold starts + "
+                         "flash crowd + failure + autoscaling; own <60 s "
+                         "budget; asserts its headline claim)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write ONE sfs-aware-vs-hash Perfetto trace of "
                          "the fleet64 smoke scenario and exit")
@@ -240,6 +281,12 @@ def main(argv=None):
     if args.fleet1024:
         rows = run_fleet1024(args.n or 500_000)
         path = save("cluster_fleet1024", {"rows": rows})
+        print("saved", path)
+        return check_headline(rows, hard=True)
+
+    if args.elastic:
+        rows = run_elastic(args.n or 20_000)
+        path = save("cluster_elastic", {"rows": rows})
         print("saved", path)
         return check_headline(rows, hard=True)
 

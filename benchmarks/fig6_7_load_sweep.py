@@ -7,28 +7,52 @@ Validated claims:
       55%/35% under CFS (Fig. 7);
   (c) SFS median turnaround ~0.1 s at EVERY load level (Fig. 8);
   (d) SFS ~= CFS at 50% load (no contention to fix).
+
+Every cell is declared as a :class:`repro.ExperimentSpec` and run
+through the single ``repro.run_experiment`` entry point (a 1-server DES
+cluster is event-identical to the bare simulator, pinned in
+``tests/test_agreement.py``), so each saved row carries full run
+provenance: the spec JSON, the seed, and the result fingerprint.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import dist_stats, run_policy, save, workload
+from benchmarks.common import CORES, N_REQUESTS, dist_stats, save
 from repro.core import metrics
+from repro.core.spec import ExperimentSpec, ServerSpec, run_experiment
+from repro.core.workload import FaaSBenchConfig
+
+SEED = 7
+
+
+def _cell(load: float, policy: str):
+    """One (load, policy) cell through the spec layer.  The plain
+    ``ServerSpec`` scheduler defaults equal ``repro.core.policies``'s
+    tuned constructors (same SimConfig field for field)."""
+    spec = ExperimentSpec(
+        engine="des", servers=(ServerSpec(cores=CORES, scheduler=policy),),
+        dispatch="hash", predictor="none",
+        workload=FaaSBenchConfig(n_requests=N_REQUESTS, cores=CORES,
+                                 load=load, seed=SEED))
+    return spec, run_experiment(spec)
 
 
 def run(loads=(0.5, 0.65, 0.8, 0.9, 1.0)) -> dict:
     out = {}
     for load in loads:
-        reqs = workload(load)
         row = {}
-        sfs_res, _ = run_policy(reqs, "sfs")
-        cfs_res, _ = run_policy(reqs, "cfs")
-        for name, res in [("sfs", sfs_res), ("cfs", cfs_res)]:
-            rte = metrics.rtes(res)
-            row[name] = {"turnaround": dist_stats(metrics.turnarounds(res)),
+        results, prov = {}, {}
+        for name in ("sfs", "cfs"):
+            spec, res = _cell(load, name)
+            results[name] = res
+            prov[name] = {"spec": spec.to_json(), "seed": SEED,
+                          "result_fp": res.fingerprint()[:16]}
+            rte = res.rte
+            row[name] = {"turnaround": dist_stats(res.turnaround),
                          "frac_rte_ge_095": float((rte >= 0.95).mean()),
-                         "mean_rte": float(rte.mean())}
-        hc = metrics.compare(sfs_res, cfs_res)
+                         "mean_rte": float(rte.mean()),
+                         "wall_s": res.wall_s}
+        hc = metrics.compare(results["sfs"].raw.merged,
+                             results["cfs"].raw.merged)
         row["headline"] = {
             "frac_improved": hc.frac_improved,
             "mean_speedup_improved": hc.mean_speedup_improved,
@@ -36,6 +60,7 @@ def run(loads=(0.5, 0.65, 0.8, 0.9, 1.0)) -> dict:
             "frac_regressed": hc.frac_regressed,
             "mean_slowdown_regressed": hc.mean_slowdown_regressed,
         }
+        row["provenance"] = prov
         out[f"load_{load}"] = row
     save("fig6_7_load_sweep", out)
     return out

@@ -39,18 +39,20 @@ SUITES = {
     "table2": table2_overhead,
     "serving": serving_e2e,
     "roofline": roofline,
-    "fleet1024": cluster_sweep,     # before "cluster": its artifact must
-    "cluster": cluster_sweep,       # be fresh when cluster distills
+    "fleet1024": cluster_sweep,     # before "cluster": their artifacts
+    "elastic": cluster_sweep,       # must be fresh when cluster distills
+    "cluster": cluster_sweep,
     "predict": predict_sweep,
 }
 
 
 # suites whose main(argv) takes CLI flags (--smoke pass-through)
-ARGV_SUITES = {"cluster", "fleet1024", "predict"}
+ARGV_SUITES = {"cluster", "fleet1024", "elastic", "predict"}
 
-# per-suite forced flags: "fleet1024" is cluster_sweep's standalone
-# 1024-engine jax-backend invocation (its own <60 s budget)
-SUITE_FLAGS = {"fleet1024": ["--fleet1024"]}
+# per-suite forced flags: "fleet1024" / "elastic" are cluster_sweep's
+# standalone invocations (each with its own <60 s budget) — the
+# 1024-engine jax-backend fleet and the lifecycle scenario
+SUITE_FLAGS = {"fleet1024": ["--fleet1024"], "elastic": ["--elastic"]}
 
 # --json distillation: suite -> (artifact names, row key fields).  "n"
 # is part of a row's identity: smoke and full runs sweep the same cells
@@ -62,7 +64,7 @@ SUITE_FLAGS = {"fleet1024": ["--fleet1024"]}
 # artifact is skipped here and surfaces as dropped baseline rows in the
 # gate).
 BENCH_JSON = {
-    "cluster": (("cluster_sweep", "cluster_fleet1024"),
+    "cluster": (("cluster_sweep", "cluster_fleet1024", "cluster_elastic"),
                 ("layer", "scenario", "backend", "policy",
                  "engines", "load", "n")),
     "predict": (("predict_sweep",), ("predictor", "dispatch", "load", "iat",

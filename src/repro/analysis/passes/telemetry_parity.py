@@ -7,7 +7,12 @@ Three claims the docs make that nothing previously enforced:
   kind in ``core/telemetry.py::KINDS``.  A backend that silently stops
   emitting e.g. ``demote`` still passes the trace-equality tests when
   compared against itself — only cross-backend comparison or this check
-  catches it.  Emitted kinds are collected from ``emit``/``emit_rows``
+  catches it.  The set is read from the KINDS tuple itself, so the
+  lifecycle kinds (``cold_start``/``fail``/``requeue``/``scale``,
+  docs/OBSERVABILITY.md) are enforced the moment they are declared: the
+  tick-family backends satisfy them through the shared frontend
+  (``serving/cluster.py`` is in every tick suffix set), the DES through
+  its own emit sites in ``core/simulator.py``.  Emitted kinds are collected from ``emit``/``emit_rows``
   string arguments plus KINDS-member strings inside list/tuple
   containers (the jax backend drives ``emit_rows`` from a
   ``[("admit", "trace_adm"), ...]`` key table).

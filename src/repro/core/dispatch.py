@@ -197,6 +197,24 @@ class DispatchPolicy:
         # optional batched state (ServerStateColumns) bound by owners
         # whose servers live in arrays; None = per-view Python path
         self.columns: Optional[ServerStateColumns] = None
+        # routable-membership mask set by lifecycle-aware owners
+        # (autoscaling / failure, docs/CLUSTER.md); None = all servers,
+        # which keeps the legacy fast paths bit-exact
+        self.active: Optional[tuple] = None
+        self._active_set: Optional[frozenset] = None
+
+    def set_active(self, active):
+        """Restrict routing to these server indices (any iterable;
+        stored sorted), or None to lift the restriction.  Masked
+        routing always takes the per-view path so every backend makes
+        the identical pick regardless of whether columns are bound."""
+        if active is None:
+            self.active = self._active_set = None
+        else:
+            self.active = tuple(sorted(active))
+            if not self.active:
+                raise ValueError("active server set must not be empty")
+            self._active_set = frozenset(self.active)
 
     def route(self, rid: int, eta: Optional[float],
               t: float) -> Optional[int]:
@@ -213,6 +231,9 @@ class DispatchPolicy:
         self.dispatch_counts[idx] += 1
 
     def _least_outstanding(self) -> int:
+        if self.active is not None:
+            return min(self.active,
+                       key=lambda i: (self.views[i].outstanding(), i))
         if self.columns is not None:
             # np.argmin returns the first minimum: ties break on index,
             # same as the tuple key below
@@ -232,6 +253,20 @@ class HashDispatch(DispatchPolicy):
     name = "hash"
 
     def route(self, rid, eta, t):
+        act = self.active
+        if act is not None:
+            # two hashed choices over the *active* membership: the salted
+            # hashes index positions in the sorted active tuple, so a
+            # shrink/grow re-spreads load over exactly the live servers
+            n = len(act)
+            if n == 1:
+                return act[0]
+            a = act[_hash(rid, 1) % n]
+            b = act[_hash(rid, 2) % n]
+            if b == a:
+                b = act[(act.index(a) + 1) % n]
+            return a if (self.views[a].outstanding()
+                         <= self.views[b].outstanding()) else b
         n = len(self.views)
         if n == 1:
             return 0
@@ -273,6 +308,14 @@ class PullDispatch(DispatchPolicy):
 
     def next_puller(self) -> Optional[int]:
         n = len(self.views)
+        if self._active_set is not None:
+            live = self._active_set
+            for k in range(n):
+                i = (self._rr + k) % n
+                if i in live and self.views[i].capacity() > 0:
+                    self._rr = (i + 1) % n
+                    return i
+            return None
         if self.columns is not None:
             # first server with capacity at/after the scan start,
             # wrapping — the same rotating scan, one vector op
@@ -379,6 +422,26 @@ class SFSAwareDispatch(DispatchPolicy):
     def route(self, rid, eta, t):
         self._observe(t)
         short = eta is None or eta <= self.S
+        act = self.active
+        if act is not None:
+            # masked routing: the same lexicographic keys, per-view, over
+            # the live membership only (S still adapts on every arrival)
+            if short:
+                best = min(act,
+                           key=lambda i: (-self.views[i].filter_free(),
+                                          self.views[i].queue_len(),
+                                          self.views[i].outstanding(), i))
+                v = self.views[best]
+                ff, ql, lanes = v.filter_free(), v.queue_len(), v.lanes
+                est_wait = ql * self.S / max(lanes, 1)
+                if ff == 0 and est_wait >= self.overload_factor * self.S:
+                    self.overload_bypasses += 1
+                    return self._least_outstanding()
+                return best
+            return min(act,
+                       key=lambda i: (self.views[i].outstanding()
+                                      - self.views[i].fair_load(),
+                                      self.views[i].outstanding(), i))
         c = self.columns.refresh() if self.columns is not None else None
         if short:
             # idle FILTER lanes first; under saturation the FILTER queue

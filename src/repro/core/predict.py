@@ -102,17 +102,28 @@ class HistoryEta(EtaPredictor):
     last ``global_window`` completions, any function) — the data-driven
     prior for a never-seen function.  With no completions at all the
     predictor returns None (unknown == short, FILTER's optimism).
+
+    ``window`` (mean mode only) bounds the per-function memory: the
+    estimate becomes the mean of the last ``window`` observations,
+    tracking drifting functions (e.g. the ``drift`` workload stage)
+    without EWMA tuning.  None keeps the unbounded running mean —
+    bit-exact legacy behaviour.
     """
 
     name = "history"
 
     def __init__(self, alpha: Optional[float] = None, mode: str = "mean",
                  min_obs: int = 1, cold_quantile: float = 0.5,
-                 global_window: int = 4096, recent_window: int = 64):
+                 global_window: int = 4096, recent_window: int = 64,
+                 window: Optional[int] = None):
         if mode not in ("mean", "median"):
             raise ValueError(f"unknown history mode: {mode!r}")
+        if window is not None and int(window) < 1:
+            raise ValueError(f"window must be >= 1, got {window!r}")
         self.alpha = alpha
         self.mode = mode
+        self.window = None if window is None else int(window)
+        self._windowed: dict = {}
         # a function needs at least one observation before per-function
         # state exists, so min_obs=0 would KeyError on never-seen ids —
         # clamp; the cold-start fallback is the 0-observation answer
@@ -137,6 +148,9 @@ class HistoryEta(EtaPredictor):
         if self.mode == "median":
             self._recent.setdefault(
                 func_id, deque(maxlen=self._recent_window)).append(s)
+        if self.window is not None:
+            self._windowed.setdefault(
+                func_id, deque(maxlen=self.window)).append(s)
         # keep the sorted quantile window incrementally (predict() may
         # need a quantile on every routing decision — re-sorting the
         # whole window per observation would be O(W log W) each)
@@ -171,6 +185,9 @@ class HistoryEta(EtaPredictor):
                 mid = len(xs) // 2
                 return (xs[mid] if len(xs) % 2
                         else 0.5 * (xs[mid - 1] + xs[mid]))
+            if self.window is not None:
+                w = self._windowed[func_id]
+                return sum(w) / len(w)
             return self._mean[func_id]
         return self.global_quantile()
 

@@ -37,8 +37,9 @@ from typing import Optional
 from repro.core.dispatch import (BoundedTimeline, PullDispatch, ServerView,
                                  make_dispatch,
                                  route_hinted)
+from repro.core.lifecycle import Autoscaler, WarmSet
 from repro.core.predict import make_predictor
-from repro.core.spec import resolve_dispatch
+from repro.core.spec import LifecycleSpec, ScalingSpec, resolve_dispatch
 from repro.core.workload import Request
 
 _EPS = 1e-12
@@ -760,6 +761,11 @@ class ClusterSimConfig:
     overload_factor: float = 3.0
     adaptive_window: int = 100
     slice_init_s: float = 0.1
+    # fleet lifecycle (cold starts / keep-alive / failure) and
+    # autoscaling: None, a LifecycleSpec/ScalingSpec, or its string
+    # form — knob times are float DES seconds here
+    lifecycle: object = None
+    scaling: object = None
 
     def server_configs(self) -> list:
         """The per-server SimConfig list both modes reduce to."""
@@ -780,7 +786,8 @@ class ClusterSimConfig:
                                       adaptive_window=self.adaptive_window,
                                       slice_init=self.slice_init_s),
             predictor=self.predictor, workload=workload,
-            dispatch_latency=self.dispatch_latency_s)
+            dispatch_latency=self.dispatch_latency_s,
+            lifecycle=self.lifecycle, scaling=self.scaling)
 
 
 @dataclasses.dataclass
@@ -837,6 +844,33 @@ class ClusterSimulator:
         self.central: deque = deque()          # (req, eta) under pull
         self.eta_log: dict[int, Optional[float]] = {}
         self.views = views
+        # -- fleet lifecycle (docs/CLUSTER.md), mirrors ClusterFrontend:
+        # the decision state machines are shared (repro.core.lifecycle),
+        # only the time base differs (float seconds here)
+        lc = cfg.lifecycle
+        self.lifecycle = LifecycleSpec.parse(lc) if isinstance(lc, str) \
+            else lc
+        sc = cfg.scaling
+        self.scaling = ScalingSpec.parse(sc) if isinstance(sc, str) else sc
+        self._cold_pen = (float(self.lifecycle.cold)
+                          if self.lifecycle else 0.0)
+        self._warm = (WarmSet(len(self.servers),
+                              keep_alive=self.lifecycle.keep_alive,
+                              cap=self.lifecycle.warm_cap)
+                      if self._cold_pen > 0 else None)
+        self._cold_extra: dict[int, float] = {}   # rid -> charged inflation
+        self._fail_at = self.lifecycle.fail_at if self.lifecycle else None
+        self._fail_server = (self.lifecycle.fail_server
+                             if self.lifecycle else 0)
+        self._dead: set[int] = set()
+        self._scaler = (Autoscaler(self.scaling, len(self.servers),
+                                   [v.lanes for v in views])
+                        if self.scaling is not None else None)
+        self._active: Optional[list] = None
+        self._next_scale = 0.0
+        if self._scaler is not None:
+            self._active = self._scaler.initial_active()
+            self.policy.set_active(self._active)
         # opt-in telemetry (core/telemetry.py), mirrors
         # ClusterFrontend.attach_telemetry; all None when disabled
         self.telemetry = None
@@ -878,6 +912,19 @@ class ClusterSimulator:
     def _deliver(self, idx: int, req: Request, t: float,
                  eta: Optional[float] = None):
         self.policy.record(idx)
+        if self._warm is not None:
+            # cold start: extra service demand the moment the request
+            # lands on a server whose container for this function is
+            # absent or expired (the workload Request is frozen, so the
+            # inflation is a replace — _cold_extra undoes it on requeue)
+            if self._warm.is_cold(idx, req.func_id, t):
+                self._cold_extra[req.rid] = self._cold_pen
+                req = dataclasses.replace(
+                    req, service=req.service + self._cold_pen)
+                if self._trace is not None:
+                    self._trace.emit(t, "cold_start", req.rid, idx,
+                                     self._cold_pen)
+            self._warm.touch(idx, req.func_id, t)
         if self._trace is not None:
             self._trace.emit(t, "dispatch", req.rid, idx, eta)
         srv = self.servers[idx]
@@ -899,6 +946,79 @@ class ClusterSimulator:
             req, eta = self.central.popleft()
             self._deliver(idx, req, t, eta)
 
+    # -- fleet lifecycle ------------------------------------------------
+    def _evict_server(self, idx: int) -> list:
+        """Strip server ``idx`` of every request that has not finished
+        (in-flight, queued, mid-I/O) and leave it inert: its event heap
+        and runnable queues empty, its cores idle, its bookkeeping
+        pruned to the finished jobs so ``_result()`` still passes."""
+        srv = self.servers[idx]
+        done = {rid for rid, j in srv.jobs.items() if j.finish is not None}
+        evicted = [r for r in srv.reqs if r.rid not in done]
+        srv.events.clear()
+        srv.global_queue.clear()
+        srv.cfs_rq.clear()
+        srv.srtf_wait.clear()
+        for c in srv.cores:
+            c.token += 1
+            c.job, c.state = None, "idle"
+        srv.reqs = [r for r in srv.reqs if r.rid in done]
+        srv.jobs = {rid: j for rid, j in srv.jobs.items() if rid in done}
+        srv.eta_hints.clear()
+        return evicted
+
+    def _fail(self, idx: int, t: float):
+        """Kill server ``idx`` at ``t`` and re-enter its evicted
+        requests through normal dispatch — same orchestration as
+        ``ClusterFrontend._fail``, in DES time."""
+        self._fail_at = None
+        self._dead.add(idx)
+        if self._warm is not None:
+            self._warm.fail(idx)
+        tr, ser = self._trace, self._series
+        if tr is not None:
+            tr.emit(t, "fail", -1, idx)
+        evicted = self._evict_server(idx)
+        if self._active is None:
+            self._active = [i for i in range(len(self.servers))
+                            if i not in self._dead]
+        else:
+            self._active = [i for i in self._active if i != idx]
+        self.policy.set_active(self._active)
+        for req in sorted(evicted, key=lambda r: r.rid):
+            pen = self._cold_extra.pop(req.rid, 0.0)
+            if pen:
+                req = dataclasses.replace(req, service=req.service - pen)
+            if tr is not None:
+                tr.emit(t, "requeue", req.rid, idx)
+            ridx, eta = route_hinted(self.policy, self.predictor, req.rid,
+                                     req.func_id, req.service, t)
+            self.eta_log[req.rid] = eta
+            if ser is not None:
+                ser.counters["predictor_hits" if eta is not None
+                             else "predictor_misses"] += 1
+            if ridx is None:
+                self.central.append((req, eta))
+            else:
+                self._deliver(ridx, req, t, eta)
+
+    def _autoscale(self, t: float):
+        load = sum(v.outstanding() for v in self.views) + len(self.central)
+        toggles = self._scaler.decide(load, self._active, self._dead)
+        if not toggles:
+            return
+        tr = self._trace
+        active = set(self._active)
+        for idx, d in toggles:
+            if d > 0:
+                active.add(idx)
+            else:
+                active.discard(idx)
+            if tr is not None:
+                tr.emit(t, "scale", -1, idx, d)
+        self._active = sorted(active)
+        self.policy.set_active(self._active)
+
     def run(self) -> ClusterSimResult:
         tr, ser = self._trace, self._series
         i, n = 0, len(self.reqs)
@@ -906,6 +1026,24 @@ class ClusterSimulator:
             t_arr = self.reqs[i].arrival if i < n else _INF
             t_srv = min((s.next_event_time() for s in self.servers),
                         default=_INF)
+            if t_arr == _INF and t_srv == _INF:
+                break
+            # lifecycle decisions fire before any arrival or server
+            # event at the same instant — the tick backends evaluate
+            # them at the top of the tick, before routing
+            t_fail = self._fail_at if self._fail_at is not None else _INF
+            t_sc = self._next_scale if self._scaler is not None else _INF
+            t_life = min(t_fail, t_sc)
+            if t_life <= min(t_arr, t_srv):
+                if ser is not None:
+                    self._sample_to(t_life)
+                if t_fail <= t_life:
+                    self._fail(self._fail_server, t_life)
+                if self._scaler is not None and t_sc <= t_life:
+                    self._autoscale(t_life)
+                    self._next_scale += self._scaler.period
+                self._drain_pull(t_life)
+                continue
             if t_arr <= t_srv and t_arr < _INF:
                 req = self.reqs[i]
                 i += 1

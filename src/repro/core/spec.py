@@ -49,9 +49,11 @@ import numpy as np
 
 __all__ = [
     "Registry", "SCHEDULER_REGISTRY", "DISPATCH_REGISTRY",
-    "PREDICTOR_REGISTRY", "DES_POLICIES", "SchedulerSpec", "DispatchSpec",
-    "PredictorSpec", "ServerSpec", "TickWorkloadSpec", "ExperimentSpec",
-    "ExperimentResult", "run_experiment", "resolve_dispatch",
+    "PREDICTOR_REGISTRY", "WORKLOAD_REGISTRY", "DES_POLICIES",
+    "SchedulerSpec", "DispatchSpec", "PredictorSpec", "LifecycleSpec",
+    "ScalingSpec", "ServerSpec", "TickWorkloadSpec", "WorkloadStageSpec",
+    "WorkloadSpec", "ExperimentSpec", "ExperimentResult", "run_experiment",
+    "resolve_dispatch",
 ]
 
 
@@ -120,6 +122,7 @@ class Registry:
 SCHEDULER_REGISTRY = Registry("scheduler", "repro.serving.schedulers")
 DISPATCH_REGISTRY = Registry("dispatch", "repro.core.dispatch")
 PREDICTOR_REGISTRY = Registry("predictor", "repro.core.predict")
+WORKLOAD_REGISTRY = Registry("workload", "repro.core.workload")
 
 # DES per-server policies are simulator modes, not factory classes, so
 # they are validated against this fixed set instead of a registry.
@@ -338,6 +341,128 @@ def resolve_dispatch(policy, *, overload_factor=None, adaptive_window=None,
 
 
 # ---------------------------------------------------------------------------
+# Fleet lifecycle specs (cold starts / keep-alive / failure, autoscaling)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LifecycleSpec(_SpecBase):
+    """Cold starts, keep-alive and server failure for a cluster run.
+
+    The runtime lives in :mod:`repro.core.lifecycle`
+    (docs/CLUSTER.md); every knob is engine-native time units (ticks
+    for the tick family, seconds for the DES):
+
+    * ``cold`` — extra service demand charged when a request's
+      ``func_id`` is not warm on the server it lands on (0 disables).
+    * ``keep_alive`` (alias ``ttl``) — warm-container time-to-live
+      since last dispatch; omitted/None keeps containers warm forever.
+    * ``warm_cap`` (alias ``cap``) — max distinct warm functions per
+      server, evicting least-recently-used beyond it (0 = unbounded).
+    * ``fail_at`` (alias ``fail``) / ``fail_server`` — kill server
+      ``fail_server`` at time ``fail_at``: its in-flight and queued
+      requests are reset and re-enter dispatch (``requeue`` events),
+      and the server never returns.
+    """
+
+    name: str = "lifecycle"
+    args: tuple = ()
+
+    ALIASES = {"ttl": "keep_alive", "cap": "warm_cap", "fail": "fail_at"}
+    _KNOWN = ("cold", "keep_alive", "warm_cap", "fail_at", "fail_server")
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.name != "lifecycle":
+            raise ValueError(f"LifecycleSpec name must be 'lifecycle', "
+                             f"got {self.name!r}")
+        for k, _ in self.args:
+            if k not in self._KNOWN:
+                raise ValueError(f"unknown lifecycle knob {k!r}; expected "
+                                 f"one of {self._KNOWN}")
+
+    @property
+    def cold(self):
+        return self.kwargs.get("cold", 0)
+
+    @property
+    def keep_alive(self):
+        return self.kwargs.get("keep_alive")
+
+    @property
+    def warm_cap(self) -> int:
+        return self.kwargs.get("warm_cap", 0)
+
+    @property
+    def fail_at(self):
+        return self.kwargs.get("fail_at")
+
+    @property
+    def fail_server(self) -> int:
+        return self.kwargs.get("fail_server", 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingSpec(_SpecBase):
+    """Load-signal autoscaler over the server fleet (docs/CLUSTER.md).
+
+    Every ``period`` time units the frontend computes fleet utilization
+    ``(outstanding + central queue) / active lanes`` and toggles
+    membership: above ``up`` it activates up to ``step`` drained
+    servers (lowest index first, never beyond ``max``); below ``down``
+    it drains up to ``step`` active servers (highest index first,
+    never below ``min``).  Draining is graceful: in-flight work
+    completes, the server just stops receiving dispatches.  The run
+    starts with servers ``0..min-1`` active.
+    """
+
+    name: str = "scale"
+    args: tuple = ()
+
+    ALIASES = {"T": "period"}
+    _KNOWN = ("min", "max", "period", "up", "down", "step")
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.name != "scale":
+            raise ValueError(f"ScalingSpec name must be 'scale', "
+                             f"got {self.name!r}")
+        for k, _ in self.args:
+            if k not in self._KNOWN:
+                raise ValueError(f"unknown scaling knob {k!r}; expected "
+                                 f"one of {self._KNOWN}")
+        if self.period < 1:
+            raise ValueError(f"scaling period must be >= 1, "
+                             f"got {self.period!r}")
+        if self.min_servers < 1:
+            raise ValueError("scaling min must be >= 1")
+
+    @property
+    def min_servers(self) -> int:
+        return self.kwargs.get("min", 1)
+
+    @property
+    def max_servers(self):
+        return self.kwargs.get("max")         # None == fleet size
+
+    @property
+    def period(self) -> int:
+        return self.kwargs.get("period", 100)
+
+    @property
+    def up(self) -> float:
+        return self.kwargs.get("up", 0.75)
+
+    @property
+    def down(self) -> float:
+        return self.kwargs.get("down", 0.25)
+
+    @property
+    def step(self) -> int:
+        return self.kwargs.get("step", 1)
+
+
+# ---------------------------------------------------------------------------
 # Server / workload / experiment specs
 # ---------------------------------------------------------------------------
 
@@ -518,6 +643,72 @@ class TickWorkloadSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class WorkloadStageSpec(_SpecBase):
+    """One stage of a staged workload in the ``name:k=v`` grammar.
+
+    ``name`` looks up :data:`WORKLOAD_REGISTRY`
+    (``repro.core.workload``): the first stage of a
+    :class:`WorkloadSpec` must be a *generator* (``generate(total_lanes)
+    -> [Request]``, e.g. ``bimodal``); later stages must be
+    *transforms* (``apply(reqs, total_lanes) -> [Request]``, e.g.
+    ``zipf`` / ``drift`` / ``flash`` / ``diurnal``).
+    """
+
+    name: str = "bimodal"
+    args: tuple = ()
+
+    def build(self):
+        return WORKLOAD_REGISTRY.get(self.name)(**self.kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Staged tick workload: a generator piped through transforms.
+
+    The pipe-combinator grammar composes registered stages serially —
+    ``"bimodal:n=800|zipf:funcs=16|flash:at=600,x=4"`` draws the
+    bimodal stream, assigns Zipf function popularity, then compresses a
+    flash crowd into ``[600, 700)``.  ``parse(str(spec)) == spec``
+    holds like every other spec (``tests/test_lifecycle.py``).
+    """
+
+    stages: tuple = (WorkloadStageSpec("bimodal"),)
+
+    def __post_init__(self):
+        stages = tuple(s if isinstance(s, WorkloadStageSpec)
+                       else WorkloadStageSpec.parse(s)
+                       for s in self.stages)
+        if not stages:
+            raise ValueError("WorkloadSpec needs at least one stage")
+        object.__setattr__(self, "stages", stages)
+
+    def __str__(self) -> str:
+        return "|".join(str(s) for s in self.stages)
+
+    @classmethod
+    def parse(cls, spec) -> "WorkloadSpec":
+        if isinstance(spec, cls):
+            return spec
+        return cls(stages=tuple(str(spec).split("|")))
+
+    def generate(self, total_lanes: int) -> list:
+        head = self.stages[0].build()
+        if not hasattr(head, "generate"):
+            raise ValueError(
+                f"workload stage {self.stages[0].name!r} is a transform; "
+                "the first stage of a WorkloadSpec must be a generator")
+        reqs = head.generate(total_lanes)
+        for st in self.stages[1:]:
+            stage = st.build()
+            if not hasattr(stage, "apply"):
+                raise ValueError(
+                    f"workload stage {st.name!r} is a generator; stages "
+                    "after the first must be transforms")
+            reqs = stage.apply(reqs, total_lanes)
+        return reqs
+
+
+@dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
     """A complete experiment: workload + engine + per-server shapes +
     dispatch + predictor.
@@ -525,10 +716,14 @@ class ExperimentSpec:
     ``servers`` is a per-server list — mixed cores/lanes/slots/policies
     are first-class in both engines.  ``workload`` is a
     :class:`~repro.core.workload.FaaSBenchConfig` (DES), a
-    :class:`TickWorkloadSpec` (tick/vector), or None when requests are
-    passed to :func:`run_experiment` directly.  ``dispatch_latency`` is
-    the DES router->server delay in seconds (the tick engine has no
-    latency model; it must stay 0 there).
+    :class:`TickWorkloadSpec` or staged :class:`WorkloadSpec` (tick
+    family; a ``"gen|stage|..."`` pipe string parses to the latter), or
+    None when requests are passed to :func:`run_experiment` directly.
+    ``dispatch_latency`` is the DES router->server delay in seconds
+    (the tick engine has no latency model; it must stay 0 there).
+    ``lifecycle`` / ``scaling`` opt the fleet into cold starts,
+    failure/drain and autoscaling (:class:`LifecycleSpec` /
+    :class:`ScalingSpec`, all four backends).
 
     ``engine="vector"`` runs tick semantics through the struct-of-arrays
     stepping backend (:mod:`repro.serving.vector_cluster`): homogeneous
@@ -544,6 +739,8 @@ class ExperimentSpec:
     predictor: object = PredictorSpec("oracle")
     workload: object = None
     dispatch_latency: float = 0.0
+    lifecycle: object = None                 # None | LifecycleSpec | str
+    scaling: object = None                   # None | ScalingSpec | str
 
     def __post_init__(self):
         if self.engine not in ("des", "tick", "vector", "jax"):
@@ -563,6 +760,37 @@ class ExperimentSpec:
         if isinstance(self.predictor, (str, PredictorSpec)):
             object.__setattr__(self, "predictor",
                                PredictorSpec.parse(self.predictor))
+        if isinstance(self.workload, str):
+            object.__setattr__(self, "workload",
+                               WorkloadSpec.parse(self.workload))
+        if isinstance(self.lifecycle, str):
+            object.__setattr__(self, "lifecycle",
+                               LifecycleSpec.parse(self.lifecycle))
+        if self.lifecycle is not None \
+                and not isinstance(self.lifecycle, LifecycleSpec):
+            raise TypeError(f"lifecycle must be a LifecycleSpec or its "
+                            f"string form, got {self.lifecycle!r}")
+        if isinstance(self.scaling, str):
+            object.__setattr__(self, "scaling",
+                               ScalingSpec.parse(self.scaling))
+        if self.scaling is not None \
+                and not isinstance(self.scaling, ScalingSpec):
+            raise TypeError(f"scaling must be a ScalingSpec or its "
+                            f"string form, got {self.scaling!r}")
+        if self.lifecycle is not None:
+            fs = self.lifecycle.fail_server
+            if not 0 <= fs < len(servers):
+                raise ValueError(
+                    f"lifecycle fail_server={fs} out of range for "
+                    f"{len(servers)} servers")
+        if self.scaling is not None:
+            if self.scaling.min_servers > len(servers):
+                raise ValueError(
+                    f"scaling min={self.scaling.min_servers} exceeds the "
+                    f"fleet size {len(servers)}")
+            mx = self.scaling.max_servers
+            if mx is not None and mx < self.scaling.min_servers:
+                raise ValueError("scaling max must be >= min")
         if self.engine in ("tick", "vector", "jax") and self.dispatch_latency:
             raise ValueError("dispatch_latency is DES-only (the tick "
                              "engine has no network-delay model)")
@@ -586,9 +814,15 @@ class ExperimentSpec:
              "dispatch": str(self.dispatch),
              "predictor": pred,
              "dispatch_latency": self.dispatch_latency,
+             "lifecycle": (None if self.lifecycle is None
+                           else str(self.lifecycle)),
+             "scaling": (None if self.scaling is None
+                         else str(self.scaling)),
              "workload": None}
         wl = self.workload
-        if isinstance(wl, TickWorkloadSpec):
+        if isinstance(wl, WorkloadSpec):
+            d["workload"] = {"kind": "staged", "spec": str(wl)}
+        elif isinstance(wl, TickWorkloadSpec):
             d["workload"] = {"kind": "tick", **dataclasses.asdict(wl)}
         elif wl is not None:
             from repro.core.workload import FaaSBenchConfig
@@ -607,7 +841,9 @@ class ExperimentSpec:
         if wl is not None:
             kind = wl.get("kind")
             body = {k: v for k, v in wl.items() if k != "kind"}
-            if kind == "tick":
+            if kind == "staged":
+                workload = WorkloadSpec.parse(body["spec"])
+            elif kind == "tick":
                 for k in ("short_range", "long_range"):
                     body[k] = tuple(body[k])
                 workload = TickWorkloadSpec(**body)
@@ -623,7 +859,8 @@ class ExperimentSpec:
         return cls(engine=d["engine"], servers=tuple(d["servers"]),
                    dispatch=d["dispatch"], predictor=d["predictor"],
                    workload=workload,
-                   dispatch_latency=d.get("dispatch_latency", 0.0))
+                   dispatch_latency=d.get("dispatch_latency", 0.0),
+                   lifecycle=d.get("lifecycle"), scaling=d.get("scaling"))
 
     # -- converters -----------------------------------------------------
     def to_cluster_sim_config(self):
@@ -632,12 +869,15 @@ class ExperimentSpec:
             n_servers=len(self.servers),
             servers=[s.to_sim_config() for s in self.servers],
             dispatch=self.dispatch, predictor=self.predictor,
-            dispatch_latency_s=self.dispatch_latency)
+            dispatch_latency_s=self.dispatch_latency,
+            lifecycle=self.lifecycle, scaling=self.scaling)
 
     def to_cluster_config(self):
         from repro.serving.cluster import ClusterConfig
         return ClusterConfig(policy=self.dispatch,
-                             predictor=self.predictor)
+                             predictor=self.predictor,
+                             lifecycle=self.lifecycle,
+                             scaling=self.scaling)
 
 
 # ---------------------------------------------------------------------------
@@ -797,10 +1037,11 @@ def _run_des(spec: ExperimentSpec, requests, t0: float,
 def _run_tick(spec: ExperimentSpec, requests, t0: float,
               max_ticks: int, tel=None) -> ExperimentResult:
     if requests is None:
-        if not isinstance(spec.workload, TickWorkloadSpec):
+        if not isinstance(spec.workload, (TickWorkloadSpec, WorkloadSpec)):
             raise ValueError(
-                "tick experiment needs a TickWorkloadSpec workload (or an "
-                f"explicit request list); got {spec.workload!r}")
+                "tick experiment needs a TickWorkloadSpec or WorkloadSpec "
+                f"workload (or an explicit request list); got "
+                f"{spec.workload!r}")
         requests = spec.workload.generate(spec.total_cores)
     cluster = _build_tick_cluster(spec)
     if tel is not None:

@@ -33,13 +33,17 @@ from typing import Optional
 # Lifecycle event vocabulary
 # ---------------------------------------------------------------------------
 
-#: Canonical event kinds, in within-timestamp ordering.  ``arrival`` and
-#: ``dispatch`` are emitted by the cluster frontend (shared code);
-#: ``admit``/``bypass``/``demote``/``preempt``/``complete`` by the
-#: per-server scheduling backends.  See docs/OBSERVABILITY.md for the
-#: exact semantics of each kind per backend.
-KINDS = ("arrival", "dispatch", "admit", "bypass", "demote", "preempt",
-         "complete")
+#: Canonical event kinds, in within-timestamp ordering.  ``arrival``,
+#: ``dispatch`` and the fleet-lifecycle kinds ``cold_start`` (aux =
+#: penalty charged), ``fail`` / ``scale`` (rid = -1; ``scale`` aux =
+#: +1 activate / -1 drain) and ``requeue`` (failed server's in-flight
+#: work re-entering dispatch) are emitted by the cluster frontend
+#: (shared code); ``admit``/``bypass``/``demote``/``preempt``/
+#: ``complete`` by the per-server scheduling backends.  See
+#: docs/OBSERVABILITY.md for the exact semantics of each kind per
+#: backend.
+KINDS = ("arrival", "dispatch", "cold_start", "admit", "bypass", "demote",
+         "preempt", "fail", "requeue", "scale", "complete")
 KIND_ORDER = {k: i for i, k in enumerate(KINDS)}
 
 
@@ -47,7 +51,9 @@ class TraceRecorder:
     """Append-only recorder of ``(t, kind, rid, server, aux)`` events.
 
     ``aux`` carries the predictor ETA on ``dispatch`` events (None when
-    the predictor abstained) and is None elsewhere.  Within one backend
+    the predictor abstained), the charged penalty on ``cold_start``,
+    the +1/-1 direction on ``scale``, and is None elsewhere.  Fleet
+    events (``fail``/``scale``) use ``rid = -1``.  Within one backend
     a tick's events may be appended in backend-specific order;
     :meth:`canonical` sorts by ``(t, kind-rank, rid, server)``, under
     which ``(t, rid, kind)`` is unique, so canonical traces from
@@ -121,7 +127,8 @@ class TraceRecorder:
                 comp[rid] = (t, server)
             if server >= 0:
                 servers.add(server)
-            if kind in ("admit", "bypass", "demote", "preempt"):
+            if kind in ("admit", "bypass", "demote", "preempt",
+                        "cold_start", "fail", "requeue", "scale"):
                 out.append({"name": kind, "ph": "i", "s": "t",
                             "ts": t * scale, "pid": pid, "tid": server,
                             "args": {"rid": rid}})

@@ -34,8 +34,9 @@ import numpy as np
 
 from repro.core.dispatch import (DispatchPolicy, HashDispatch, PullDispatch,
                                  ServerView, make_dispatch, route_hinted)
+from repro.core.lifecycle import Autoscaler, WarmSet, lifecycle_horizon
 from repro.core.predict import make_predictor
-from repro.core.spec import resolve_dispatch
+from repro.core.spec import LifecycleSpec, ScalingSpec, resolve_dispatch
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 
@@ -84,6 +85,10 @@ class ClusterConfig:
     overload_factor: float = 3.0
     adaptive_window: int = 100
     slice_init: float = 32.0
+    # fleet lifecycle (cold starts / keep-alive / failure) and
+    # autoscaling: None, a LifecycleSpec/ScalingSpec, or its string form
+    lifecycle: object = None
+    scaling: object = None
 
     def to_spec(self, servers):
         """Equivalent :class:`~repro.core.spec.ExperimentSpec`;
@@ -97,7 +102,8 @@ class ClusterConfig:
                                       overload_factor=self.overload_factor,
                                       adaptive_window=self.adaptive_window,
                                       slice_init=self.slice_init),
-            predictor=self.predictor)
+            predictor=self.predictor,
+            lifecycle=self.lifecycle, scaling=self.scaling)
 
 
 class ClusterFrontend:
@@ -125,6 +131,31 @@ class ClusterFrontend:
         self.eta_log: dict[int, Optional[int]] = {}
         self.central_queue: deque[Request] = deque()
         self.t = 0
+        # -- fleet lifecycle (docs/CLUSTER.md) --------------------------
+        lc = self.cfg.lifecycle
+        self.lifecycle = (LifecycleSpec.parse(lc)
+                          if isinstance(lc, str) else lc)
+        sc = self.cfg.scaling
+        self.scaling = ScalingSpec.parse(sc) if isinstance(sc, str) else sc
+        self._cold_pen = int(self.lifecycle.cold) if self.lifecycle else 0
+        self._warm = (WarmSet(self.n_servers,
+                              keep_alive=self.lifecycle.keep_alive,
+                              cap=self.lifecycle.warm_cap)
+                      if self._cold_pen > 0 else None)
+        self._cold_extra: dict[int, int] = {}   # rid -> charged inflation
+        self._fail_at = self.lifecycle.fail_at if self.lifecycle else None
+        self._fail_server = (self.lifecycle.fail_server
+                             if self.lifecycle else 0)
+        self._dead: set[int] = set()
+        self._scaler = (Autoscaler(self.scaling, self.n_servers,
+                                   [v.lanes for v in self.views])
+                        if self.scaling is not None else None)
+        # live membership: None = unrestricted (legacy fast paths); a
+        # sorted list once autoscaling or a failure constrains routing
+        self._active: Optional[list] = None
+        if self._scaler is not None:
+            self._active = self._scaler.initial_active()
+            self.policy.set_active(self._active)
         # (t, central_qlen after pulls, tuple of per-engine active counts)
         self.tick_log: list[tuple[int, int, tuple]] = []
         # opt-in telemetry (core/telemetry.py): all None when disabled,
@@ -199,6 +230,17 @@ class ClusterFrontend:
     def _deliver(self, idx: int, req: Request):
         self.policy.record(idx)
         eta = self.eta_log.get(req.rid)
+        if self._warm is not None:
+            # cold start: charge the penalty as extra decode demand the
+            # moment the request lands on a server whose container for
+            # this function is absent or expired (docs/CLUSTER.md)
+            if self._warm.is_cold(idx, req.func_id, self.t):
+                self._cold_extra[req.rid] = self._cold_pen
+                req.n_tokens += self._cold_pen
+                if self._trace is not None:
+                    self._trace.emit(self.t, "cold_start", req.rid, idx,
+                                     self._cold_pen)
+            self._warm.touch(idx, req.func_id, self.t)
         if self._trace is not None:
             # dispatch-route event: chosen server + predictor ETA
             self._trace.emit(self.t, "dispatch", req.rid, idx, eta)
@@ -209,8 +251,80 @@ class ClusterFrontend:
             req.eta_hint = eta
         self._submit(idx, req)
 
+    # -- fleet lifecycle ------------------------------------------------
+    def _evict_server(self, idx: int) -> list:
+        """Backend hook: remove every resident request of server ``idx``
+        (in-flight, queued and slot-pending) and reset the server to an
+        empty state.  Returns the evicted serving Requests."""
+        raise NotImplementedError
+
+    def _lifecycle_horizon(self) -> Optional[int]:
+        """Next tick a lifecycle decision can fire at, or None.  The
+        jax backend clamps its event-driven fast-forward to this so
+        failure/scale decisions are evaluated at exactly the same tick
+        as in the per-tick backends."""
+        if self._fail_at is None and self._scaler is None:
+            return None
+        return lifecycle_horizon(self.t, self._fail_at, self._scaler)
+
+    def _lifecycle_tick(self):
+        """Evaluate failure then autoscale at the top of a tick, before
+        any of the tick's arrivals are routed."""
+        if self._fail_at is not None and self.t >= self._fail_at:
+            self._fail(self._fail_server)
+        if self._scaler is not None and self.t % self._scaler.period == 0:
+            self._autoscale()
+
+    def _fail(self, idx: int):
+        """Kill server ``idx``: evict its resident requests, remove it
+        from the routable set forever, and re-enter every evicted
+        request through normal dispatch (requeue events)."""
+        self._fail_at = None
+        self._dead.add(idx)
+        if self._warm is not None:
+            self._warm.fail(idx)
+        tr = self._trace
+        if tr is not None:
+            tr.emit(self.t, "fail", -1, idx)
+        evicted = self._evict_server(idx)
+        if self._active is None:
+            self._active = [i for i in range(self.n_servers)
+                            if i not in self._dead]
+        else:
+            self._active = [i for i in self._active if i != idx]
+        self.policy.set_active(self._active)
+        for req in sorted(evicted, key=lambda r: r.rid):
+            req.requeue_reset(self._cold_extra.pop(req.rid, 0))
+            if tr is not None:
+                tr.emit(self.t, "requeue", req.rid, idx)
+            ridx = self.route(req)
+            if ridx is None:
+                self.central_queue.append(req)
+            else:
+                self._deliver(ridx, req)
+
+    def _autoscale(self):
+        load = sum(v.outstanding() for v in self.views) \
+            + len(self.central_queue)
+        toggles = self._scaler.decide(load, self._active, self._dead)
+        if not toggles:
+            return
+        tr = self._trace
+        active = set(self._active)
+        for idx, d in toggles:
+            if d > 0:
+                active.add(idx)
+            else:
+                active.discard(idx)
+            if tr is not None:
+                tr.emit(self.t, "scale", -1, idx, d)
+        self._active = sorted(active)
+        self.policy.set_active(self._active)
+
     def tick(self, arrivals: Sequence[Request] = ()):
         """Dispatch this tick's arrivals, drain pulls, tick every engine."""
+        if self._fail_at is not None or self._scaler is not None:
+            self._lifecycle_tick()
         tr, prof = self._trace, self._prof
         if tr is not None and arrivals:
             t = self.t
@@ -292,6 +406,24 @@ class ClusterFrontend:
         }
 
 
+def _evict_engine(engine: Engine, trace, idx: int) -> list:
+    """Evict every resident request of a per-object engine and reset it
+    to empty (fresh scheduler, full slot pool).  Shared by ``Cluster``
+    and the vector backend's object-engine stragglers."""
+    from repro.serving.schedulers import make_scheduler
+    evicted = list(engine.by_slot.values()) + list(engine.pending_slot)
+    engine.by_slot.clear()
+    engine.pending_slot.clear()
+    engine.free_slots = list(range(engine.ecfg.n_slots))
+    engine.next_token.clear()
+    engine.n_stalled = 0
+    engine.scheduler = make_scheduler(engine.ecfg.policy, engine.ecfg.lanes,
+                                      **engine.ecfg.sched_kw)
+    if trace is not None:
+        engine.scheduler.bind_trace(trace, idx)
+    return evicted
+
+
 class Cluster(ClusterFrontend):
     """N per-object engines, one dispatch policy, lock-step ticks."""
 
@@ -310,6 +442,9 @@ class Cluster(ClusterFrontend):
 
     def _submit(self, idx: int, req: Request):
         self.engines[idx].submit(req, getattr(req, "_prompt", None))
+
+    def _evict_server(self, idx: int) -> list:
+        return _evict_engine(self.engines[idx], self._trace, idx)
 
     def _step(self):
         for e in self.engines:

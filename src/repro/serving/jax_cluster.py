@@ -714,6 +714,54 @@ class _JaxGroup:
         return [(self.members[g], int(key - g * L2), int(row))
                 for g, key, row in zip(eng, ev[:, _EKEY], rows)]
 
+    # -- fleet lifecycle ----------------------------------------------
+    def evict(self, j: int) -> list:
+        """Remove every resident request of engine ``j`` (queue ring,
+        FILTER lanes, fair-share pool, pending deque, any unflushed
+        arrival batch) and zero its device regions — the jax half of
+        the frontend's ``_evict_server`` hook.  Pull/patch/push: the
+        array shapes are unchanged, so no re-jit."""
+        import jax.numpy as jnp
+        st = self.store
+        rows: list = []
+        if self._batch:
+            # arrivals classified this tick but not yet scattered
+            b = np.array(self._batch, np.int64).reshape(-1, 5)
+            keep = b[:, 0] != j
+            rows.extend(b[~keep, 2].tolist())
+            self._batch = b[keep].reshape(-1).tolist()
+        host = {k: np.asarray(v).copy() for k, v in self._state.items()}
+        qn = int(host["qn"][j])
+        if qn:
+            idx = (int(host["qh"][j]) + np.arange(qn)) % self.QCAP
+            rows.extend(host["q"][j, idx, _QROW].tolist())
+        lc = int(host["lc"][j])
+        if lc:
+            rows.extend(host["lanes"][j, :lc, _LROW].tolist())
+        pc = int(host["pc"][j])
+        if pc:
+            rows.extend(host["pool"][j, :pc, _PROW].tolist())
+        evicted = [st.reqs[int(r)] for r in rows]
+        evicted.extend(req for _row, req in self.pending[j])
+        self.pending[j].clear()
+        for k in ("q", "lanes", "pool", "qh", "qn", "lc", "pc"):
+            host[k][j] = 0
+        host["last"][j] = -1
+        self._state = {k: jnp.asarray(v) for k, v in host.items()}
+        # host mirrors: engine j is empty from here on (the orphaned
+        # store rows are never written back — resubmission adds fresh
+        # rows), and the stale event-skip distance must be discarded
+        self.qh[j] = 0
+        self.qlen[j] = 0
+        self.filter_count[j] = 0
+        self.cfs_count[j] = 0
+        self.n_active[j] = 0
+        self.pending_len[j] = 0
+        self.free_slots[j] = self.n_slots
+        self.outstanding[j] = 0
+        self.min_next = 1
+        return evicted
+
     # -- multi-tick fast paths -----------------------------------------
     def skip_valid(self) -> bool:
         """No event before ``min_next`` ticks can change behaviour:
@@ -916,6 +964,12 @@ class JaxCluster(ClusterFrontend):
         group.submit(j, req, self.t)
         self._cols.mark(idx)
 
+    def _evict_server(self, idx: int) -> list:
+        group, j = self._backend[idx]
+        evicted = group.evict(j)
+        self._cols.mark(idx)
+        return evicted
+
     def _observe_finish(self, req: Request, t: int):
         # series completion counters are handled in _replay from the
         # store columns — ``req`` is only written back at collect time,
@@ -1065,8 +1119,15 @@ class JaxCluster(ClusterFrontend):
                 i += 1
             if (not arrivals and not self.central_queue):
                 next_arr = workload[i].arrival if i < n else max_ticks + 2
-                if self._fast_forward(min(next_arr, max_ticks + 2)
-                                      - self.t):
+                limit = min(next_arr, max_ticks + 2)
+                horizon = self._lifecycle_horizon()
+                if horizon is not None:
+                    # never fast-forward past a pending failure or the
+                    # next autoscale boundary: the decision must be
+                    # evaluated by a real tick at exactly that time,
+                    # same as the per-tick backends
+                    limit = min(limit, horizon)
+                if self._fast_forward(limit - self.t):
                     continue
             self.tick(arrivals)
         return sorted(self._collect(), key=lambda r: r.rid)

@@ -59,6 +59,30 @@ class Request:
             r += 1
         return r
 
+    def requeue_reset(self, cold_extra: int = 0) -> "Request":
+        """Reset every piece of scheduling state after a server failure
+        so the request can re-enter dispatch from scratch (in-flight
+        progress is lost with the server).  ``cold_extra`` removes a
+        previously charged cold-start inflation — the new server makes
+        its own warm/cold decision.  ``arrival`` is untouched: the
+        re-run still counts against the original turnaround."""
+        self.n_tokens -= cold_extra
+        self.slot = None
+        self.tokens_done = 0
+        self.prefill_done = False
+        self.first_start = None
+        self.finish = None
+        self.served_ticks = 0
+        self.n_ctx = 0
+        self.demoted = False
+        self.stall_until = -1
+        self.stall_idx = 0
+        self.vruntime = 0.0
+        self.slice_left = None
+        self.queue_enter = 0
+        self.queue_delay = 0
+        return self
+
     @property
     def turnaround(self) -> Optional[int]:
         return None if self.finish is None else self.finish - self.arrival

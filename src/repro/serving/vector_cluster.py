@@ -292,6 +292,37 @@ class _VectorGroup:
             self.pending[j].append(row)
             self.pending_len[j] += 1
 
+    def evict(self, j: int) -> list:
+        """Server failure (docs/CLUSTER.md): remove every resident
+        request of engine ``j`` — queued, slot-pending, FILTER-running
+        and fair-share — and reset the engine to empty.  The evicted
+        requests' store rows are orphaned (a requeue allocates fresh
+        rows on whichever server they land on next); the engine itself
+        keeps stepping as a permanent no-op."""
+        st = self.store
+        rows = [int(r) for r in self.queue[j]]
+        self.queue[j].clear()
+        self.qlen[j] = 0
+        rows += [int(r) for r in self.pending[j]]
+        self.pending[j].clear()
+        self.pending_len[j] = 0
+        frows = self.filter_rids[j, :int(self.filter_count[j])].copy()
+        st.in_filter[frows] = False
+        self.filter_rids[j] = -1
+        self.filter_count[j] = 0
+        rows += frows.tolist()
+        crows = self.cfs_rows[j, :int(self.cfs_count[j])].copy()
+        st.in_cfs[crows] = False
+        st.pool_pos[crows] = -1
+        self.cfs_rows[j] = -1
+        self.cfs_count[j] = 0
+        rows += crows.tolist()
+        self.last_rows[j] = -1
+        self.free_slots[j] = self.n_slots
+        self.outstanding[j] = 0
+        self.n_active[j] = 0
+        return [st.reqs[r] for r in rows]
+
     def _admit_pending(self, t: int):
         for j in np.nonzero((self.pending_len > 0) & (self.free_slots > 0)
                             )[0]:
@@ -636,6 +667,17 @@ class VectorCluster(ClusterFrontend):
             group, j = b
             group.submit(j, req, self.t)
         self._cols.mark(idx)
+
+    def _evict_server(self, idx: int) -> list:
+        b = self._backend[idx]
+        if b is None:
+            from repro.serving.cluster import _evict_engine
+            evicted = _evict_engine(self.stragglers[idx], self._trace, idx)
+        else:
+            group, j = b
+            evicted = group.evict(j)
+        self._cols.mark(idx)
+        return evicted
 
     def _step(self):
         prof = self._prof

@@ -182,11 +182,13 @@ def test_jax_backend_bit_exact_on_cfs_group():
 # ---------------------------------------------------------------------------
 
 
-def _run_traced(engine, servers, dispatch, predictor, wl):
+def _run_traced(engine, servers, dispatch, predictor, wl,
+                lifecycle=None, scaling=None):
     tel = Telemetry(trace=True)
     res = run_experiment(ExperimentSpec(
         engine=engine, servers=servers, dispatch=dispatch,
-        predictor=predictor, workload=wl),
+        predictor=predictor, workload=wl, lifecycle=lifecycle,
+        scaling=scaling),
         max_ticks=2_000_000, telemetry=tel)
     return res, tel.trace
 
@@ -249,6 +251,79 @@ def test_des_cluster_trace_matches_single_simulator():
     counts = tel.trace.counts()
     assert counts["arrival"] == counts["dispatch"] == res.n
     assert counts["complete"] == res.n
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle agreement (docs/CLUSTER.md "Production realism"): cold
+# starts, failure/drain and autoscaling are frontend-side decisions, so
+# all three tick backends must emit the SAME canonical event stream with
+# them enabled; and the DES cluster's cold-start charge must equal a
+# bare Simulator fed the pre-inflated workload at n=1.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dispatch", ["hash", "sfs-aware"])
+def test_trace_agreement_cold_start_keep_alive(dispatch):
+    servers = tuple(ServerSpec(cores=2) for _ in range(4))
+    wl = "bimodal:n=250,seed=23|zipf:funcs=8,s=1.2"
+    canon, fp, counts = {}, set(), None
+    for engine in ("tick", "vector", "jax"):
+        res, tr = _run_traced(engine, servers, dispatch, "history", wl,
+                              lifecycle="lifecycle:cold=3,ttl=60,cap=4")
+        canon[engine] = tr.canonical()
+        fp.add(res.fingerprint())
+        counts = counts or tr.counts()
+    assert canon["tick"] == canon["vector"] == canon["jax"]
+    assert len(fp) == 1
+    assert counts["cold_start"] > 0
+    assert counts["fail"] == counts["requeue"] == counts["scale"] == 0
+
+
+def test_trace_agreement_failure_drain_and_scaling():
+    """The full lifecycle stack at once — keep-alive cold starts, a
+    mid-run server failure with drain/requeue, and an autoscaler — still
+    equal-trace across tick/vector/jax, with every request finishing."""
+    servers = tuple(ServerSpec(cores=2) for _ in range(4))
+    wl = "bimodal:n=250,seed=5,load=1.2|flash:at=150,x=4,dur=200"
+    canon, fp, counts = {}, set(), None
+    for engine in ("tick", "vector", "jax"):
+        res, tr = _run_traced(
+            engine, servers, "sfs-aware", "history", wl,
+            lifecycle="lifecycle:cold=3,ttl=60,cap=4,fail=40,fail_server=1",
+            scaling="scale:min=2,T=25,up=0.5,down=0.1")
+        canon[engine] = tr.canonical()
+        fp.add(res.fingerprint())
+        counts = counts or tr.counts()
+        assert res.n == 250                     # drained work is re-run
+    assert canon["tick"] == canon["vector"] == canon["jax"]
+    assert len(fp) == 1
+    assert counts["fail"] == 1 and counts["requeue"] > 0
+    assert counts["scale"] > 0 and counts["cold_start"] > 0
+
+
+def test_des_cluster_cold_start_parity_at_n1():
+    """DES leg of the cold-start cross-check: a 1-server cluster with a
+    cold penalty (no keep-alive expiry, unbounded warm cap — each
+    function is cold exactly once) equals a bare Simulator fed the same
+    workload with that first-invocation inflation applied by hand."""
+    import dataclasses
+    reqs = generate(FaaSBenchConfig(n_requests=800, cores=4, load=1.0,
+                                    seed=7, n_functions=8))
+    pen = 0.05
+    res = run_experiment(ExperimentSpec(
+        engine="des", servers=(ServerSpec(cores=4),), dispatch="hash",
+        predictor="none", lifecycle=f"lifecycle:cold={pen}"),
+        requests=reqs)
+    seen, inflated = set(), []
+    for r in sorted(reqs, key=lambda r: (r.arrival, r.rid)):
+        if r.func_id not in seen:
+            seen.add(r.func_id)
+            r = dataclasses.replace(r, service=r.service + pen)
+        inflated.append(r)
+    ref = simulate(inflated, SimConfig(cores=4, policy="sfs"))
+    key = lambda s: (s.rid, s.finish, s.n_ctx, s.demoted)
+    assert sorted(map(key, res.raw.merged.stats)) == \
+        sorted(map(key, ref.stats))
 
 
 def test_vector_and_des_agree_on_sfs_aware_headline():

@@ -1,0 +1,343 @@
+"""Fleet lifecycle (docs/CLUSTER.md): cold starts + keep-alive,
+autoscaling, failure/drain, and the composable WorkloadSpec stage
+registry — spec round-trips (property-based), the shared runtime state
+machines, stage transform invariants, and behavioral end-to-end checks.
+Cross-engine trace equality for these scenarios lives in
+tests/test_agreement.py."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lifecycle import Autoscaler, WarmSet, lifecycle_horizon
+from repro.core.spec import (WORKLOAD_REGISTRY, ExperimentSpec,
+                             LifecycleSpec, ScalingSpec, ServerSpec,
+                             WorkloadSpec, WorkloadStageSpec,
+                             run_experiment)
+from repro.core.telemetry import Telemetry
+from repro.core.workload import FaaSBenchConfig, generate
+from repro.serving.request import Request
+
+# ---------------------------------------------------------------------------
+# Spec grammar: parse(str(spec)) == spec, property-based
+# ---------------------------------------------------------------------------
+
+_lifecycle_specs = st.builds(
+    lambda cold, ttl, cap, fail_at, fail_server: LifecycleSpec(
+        "lifecycle", (("cold", cold), ("keep_alive", ttl),
+                      ("warm_cap", cap), ("fail_at", fail_at),
+                      ("fail_server", fail_server))),
+    cold=st.integers(0, 50), ttl=st.integers(1, 500),
+    cap=st.integers(0, 8), fail_at=st.integers(0, 400),
+    fail_server=st.integers(0, 7))
+
+_scaling_specs = st.builds(
+    lambda mn, mx, period, up, down, step: ScalingSpec(
+        "scale", (("min", mn), ("max", mx), ("period", period),
+                  ("up", up), ("down", down), ("step", step))),
+    mn=st.integers(1, 4), mx=st.integers(4, 16),
+    period=st.integers(1, 200), up=st.floats(0.5, 4.0),
+    down=st.floats(0.0, 0.5), step=st.integers(1, 4))
+
+_stage_specs = st.one_of(
+    st.builds(lambda n, seed: WorkloadStageSpec(
+        "bimodal", (("n", n), ("seed", seed))),
+        n=st.integers(1, 300), seed=st.integers(0, 50)),
+    st.builds(lambda funcs, s: WorkloadStageSpec(
+        "zipf", (("funcs", funcs), ("s", s))),
+        funcs=st.integers(1, 32), s=st.floats(0.5, 2.0)),
+    st.builds(lambda at, x: WorkloadStageSpec(
+        "drift", (("at", at), ("x", x))),
+        at=st.integers(0, 500), x=st.floats(1.0, 4.0)),
+    st.builds(lambda at, x, dur: WorkloadStageSpec(
+        "flash", (("at", at), ("x", x), ("dur", dur))),
+        at=st.integers(0, 500), x=st.floats(1.0, 8.0),
+        dur=st.integers(1, 200)),
+    st.builds(lambda period, amp: WorkloadStageSpec(
+        "diurnal", (("period", period), ("amp", amp))),
+        period=st.integers(10, 500), amp=st.floats(0.0, 0.9)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(spec=st.one_of(_lifecycle_specs, _scaling_specs))
+def test_lifecycle_and_scaling_spec_round_trip(spec):
+    assert type(spec).parse(str(spec)) == spec
+
+
+@settings(max_examples=60, deadline=None)
+@given(head=st.builds(lambda n: WorkloadStageSpec("bimodal", (("n", n),)),
+                      n=st.integers(1, 300)),
+       tail=st.lists(_stage_specs, min_size=0, max_size=3))
+def test_workload_spec_pipe_round_trip(head, tail):
+    wl = WorkloadSpec(stages=tuple([head] + tail))
+    assert WorkloadSpec.parse(str(wl)) == wl
+    assert str(wl).count("|") == len(tail)
+
+
+def test_lifecycle_aliases_normalize():
+    assert LifecycleSpec.parse("lifecycle:ttl=30,cap=2,fail=10") == \
+        LifecycleSpec("lifecycle", (("keep_alive", 30), ("warm_cap", 2),
+                                    ("fail_at", 10)))
+    assert ScalingSpec.parse("scale:T=50") == \
+        ScalingSpec("scale", (("period", 50),))
+    with pytest.raises(ValueError, match="unknown lifecycle knob"):
+        LifecycleSpec.parse("lifecycle:warm=3")
+    with pytest.raises(ValueError, match="period"):
+        ScalingSpec.parse("scale:T=0")
+
+
+def test_workload_spec_stage_order_validation():
+    with pytest.raises(ValueError, match="transform"):
+        WorkloadSpec.parse("zipf:funcs=4").generate(4)
+    with pytest.raises(ValueError, match="generator"):
+        WorkloadSpec.parse("bimodal:n=10|bimodal:n=10").generate(4)
+
+
+def test_experiment_spec_json_round_trip_with_lifecycle():
+    spec = ExperimentSpec(
+        engine="vector", servers=(ServerSpec(cores=4),) * 4,
+        dispatch="sfs-aware", predictor="history",
+        workload="bimodal:n=200,seed=3|zipf:funcs=8|flash:at=100,x=4",
+        lifecycle="lifecycle:cold=3,ttl=40,fail=25,fail_server=1",
+        scaling="scale:min=2,T=20")
+    back = ExperimentSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec
+    assert isinstance(back.workload, WorkloadSpec)
+    assert isinstance(back.lifecycle, LifecycleSpec)
+    assert isinstance(back.scaling, ScalingSpec)
+
+
+def test_experiment_spec_validates_lifecycle_bounds():
+    servers = (ServerSpec(cores=2),) * 2
+    with pytest.raises(ValueError, match="fail_server"):
+        ExperimentSpec(engine="vector", servers=servers,
+                       lifecycle="lifecycle:cold=1,fail=5,fail_server=2")
+    with pytest.raises(ValueError, match="min"):
+        ExperimentSpec(engine="vector", servers=servers,
+                       scaling="scale:min=3")
+
+
+# ---------------------------------------------------------------------------
+# Runtime state machines (repro.core.lifecycle)
+# ---------------------------------------------------------------------------
+
+
+def test_warm_set_keep_alive_and_lru_cap():
+    w = WarmSet(2, keep_alive=10, cap=2)
+    assert w.is_cold(0, 7, 0)                 # never seen
+    w.touch(0, 7, 0)
+    assert not w.is_cold(0, 7, 5)             # within ttl
+    assert w.is_cold(0, 7, 11)                # expired
+    assert w.is_cold(1, 7, 5)                 # per-server sets
+    # LRU beyond cap, func_id breaking last-use ties
+    w.touch(0, 1, 20)
+    w.touch(0, 2, 20)                         # evicts func 7 (t=0)
+    assert w.warm_count(0) == 2
+    assert w.is_cold(0, 7, 21) and not w.is_cold(0, 1, 21)
+    w.touch(0, 3, 20)                         # tie at t=20: evicts func 1
+    assert w.is_cold(0, 1, 21) and not w.is_cold(0, 2, 21)
+    w.fail(0)
+    assert w.warm_count(0) == 0 and w.is_cold(0, 2, 21)
+
+
+def test_autoscaler_decisions():
+    sc = ScalingSpec.parse("scale:min=1,max=3,T=10,up=0.75,down=0.25,"
+                           "step=2")
+    a = Autoscaler(sc, 4, [4, 4, 4, 4])
+    assert a.initial_active() == [0]
+    # util 2.0 > up: grow by step, lowest index first, capped at max=3
+    assert a.decide(8, [0], set()) == [(1, +1), (2, +1)]
+    # dead servers are skipped and shrink the live capacity
+    assert a.decide(8, [0], {1}) == [(2, +1), (3, +1)]
+    assert a.decide(99, [0, 2, 3], {1}) == []      # at max live cap
+    # util below down: drain highest index first, floored at min
+    assert a.decide(1, [0, 1, 2], set()) == [(2, -1), (1, -1)]
+    assert a.decide(0, [0], set()) == []           # already at min
+    # in-band: no toggles
+    assert a.decide(6, [0, 1], set()) == []        # util 0.75 == up
+
+
+def test_lifecycle_horizon():
+    assert lifecycle_horizon(5, None, None) is None
+    assert lifecycle_horizon(5, 9, None) == 9
+    assert lifecycle_horizon(12, 9, None) == 12    # overdue clamps to now
+    sc = Autoscaler(ScalingSpec.parse("scale:T=10"), 4, [1] * 4)
+    assert lifecycle_horizon(10, None, sc) == 10   # boundary is now
+    assert lifecycle_horizon(11, None, sc) == 20
+    assert lifecycle_horizon(11, 14, sc) == 14     # fail before boundary
+
+
+def test_requeue_reset_restores_fresh_request():
+    r = Request(rid=3, arrival=7, prompt_len=4, n_tokens=10)
+    r.n_tokens += 5                                # cold inflation
+    r.tokens_done, r.prefill_done, r.slot = 6, True, 2
+    r.served_ticks, r.n_ctx, r.demoted = 8, 2, True
+    r.vruntime, r.slice_left, r.queue_delay = 3.0, 4, 9
+    r.requeue_reset(cold_extra=5)
+    fresh = Request(rid=3, arrival=7, prompt_len=4, n_tokens=10)
+    assert r == fresh                              # arrival survives
+
+
+# ---------------------------------------------------------------------------
+# Workload stage transforms
+# ---------------------------------------------------------------------------
+
+
+def _base_reqs(n=200, seed=3):
+    return WorkloadSpec.parse(f"bimodal:n={n},seed={seed}").generate(16)
+
+
+def test_zipf_stage_is_deterministic_and_skewed():
+    stage = WORKLOAD_REGISTRY.get("zipf")(funcs=8, s=1.2, seed=5)
+    r1 = stage.apply(_base_reqs(), 16)
+    r2 = WORKLOAD_REGISTRY.get("zipf")(funcs=8, s=1.2, seed=5).apply(
+        _base_reqs(), 16)
+    assert [r.func_id for r in r1] == [r.func_id for r in r2]
+    counts = [0] * 8
+    for r in r1:
+        counts[r.func_id] += 1
+    assert set(f.func_id for f in r1) <= set(range(8))
+    assert counts[0] == max(counts)                # rank-1 most popular
+
+
+def test_drift_stage_scales_durations_after_onset():
+    base = _base_reqs()
+    at = sorted(r.arrival for r in base)[len(base) // 2]
+    before = {r.rid: r.n_tokens for r in base}
+    out = WORKLOAD_REGISTRY.get("drift")(at=at, x=2.0).apply(base, 16)
+    for r in out:
+        want = (max(1, int(before[r.rid] * 2.0))
+                if r.arrival >= at else before[r.rid])
+        assert r.n_tokens == want
+
+
+def test_flash_stage_compresses_window_preserving_work():
+    base = _base_reqs(400)
+    at = sorted(r.arrival for r in base)[100]
+    dur = 200
+    total = sum(r.n_tokens for r in base)
+    n_in = sum(1 for r in base if at <= r.arrival < at + dur)
+    out = WORKLOAD_REGISTRY.get("flash")(at=at, x=4.0, dur=dur).apply(
+        base, 16)
+    assert sum(r.n_tokens for r in out) == total   # work untouched
+    span = dur / 4.0
+    n_now = sum(1 for r in out if at <= r.arrival < at + span + 1)
+    assert n_now >= n_in                           # spike densified
+
+
+def test_diurnal_stage_is_monotone_and_nonnegative():
+    base = sorted(_base_reqs(300), key=lambda r: (r.arrival, r.rid))
+    out = WORKLOAD_REGISTRY.get("diurnal")(period=100, amp=0.8).apply(
+        base, 16)
+    arr = [r.arrival for r in out]
+    assert min(arr) >= 0
+    assert arr == sorted(arr)                      # amp < 1 keeps order
+    with pytest.raises(ValueError, match="amp"):
+        WORKLOAD_REGISTRY.get("diurnal")(period=100, amp=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Behavioral end-to-end (vector backend; cross-engine equality is pinned
+# in tests/test_agreement.py)
+# ---------------------------------------------------------------------------
+
+
+def _run(engine="vector", wl="bimodal:n=200,seed=5", trace=True, **kw):
+    spec = ExperimentSpec(
+        engine=engine, servers=tuple(ServerSpec(cores=2) for _ in range(4)),
+        dispatch=kw.pop("dispatch", "sfs-aware"),
+        predictor=kw.pop("predictor", "history"), workload=wl, **kw)
+    tel = Telemetry(trace=True) if trace else None
+    res = run_experiment(spec, max_ticks=2_000_000, telemetry=tel)
+    return res, (tel.trace.canonical() if trace else None)
+
+
+def test_cold_start_charges_and_keep_alive_expires():
+    res_cold, tr = _run(lifecycle="lifecycle:cold=5,ttl=30,cap=2",
+                        wl="bimodal:n=200,seed=5|zipf:funcs=8")
+    res_base, _ = _run(wl="bimodal:n=200,seed=5|zipf:funcs=8", trace=False)
+    colds = [e for e in tr if e[1] == "cold_start"]
+    assert colds and all(e[4] == 5 for e in colds)
+    # every server's first dispatch of a function is cold
+    first = set()
+    for t, kind, rid, server, aux in tr:
+        if kind == "cold_start":
+            first.add((rid, server))
+    assert len(colds) >= len({s for _, s in first})
+    # the charged demand shows up as strictly more total service
+    assert res_cold.service.sum() > res_base.service.sum()
+    # a tiny ttl cold-starts strictly more often than no expiry
+    _, tr_ttl = _run(lifecycle="lifecycle:cold=5,ttl=1",
+                     wl="bimodal:n=200,seed=5|zipf:funcs=8")
+    n_keep = sum(1 for e in tr if e[1] == "cold_start")
+    n_expire = sum(1 for e in tr_ttl if e[1] == "cold_start")
+    assert n_expire > n_keep
+
+
+@pytest.mark.parametrize("engine", ["vector", "des"])
+def test_failure_drains_and_requeues(engine):
+    if engine == "des":
+        reqs = generate(FaaSBenchConfig(n_requests=300, cores=2, load=0.9,
+                                        seed=7, n_functions=8))
+        spec = ExperimentSpec(
+            engine="des",
+            servers=tuple(ServerSpec(cores=2) for _ in range(4)),
+            dispatch="least-outstanding", predictor="history",
+            lifecycle="lifecycle:cold=0.05,fail=10,fail_server=1")
+        tel = Telemetry(trace=True)
+        res = run_experiment(spec, requests=reqs, telemetry=tel)
+        tr = tel.trace.canonical()
+        n = 300
+    else:
+        res, tr = _run(dispatch="least-outstanding",
+                       lifecycle="lifecycle:cold=3,fail=40,fail_server=1")
+        n = 200
+    assert res.n == n                              # nothing lost
+    fails = [e for e in tr if e[1] == "fail"]
+    assert len(fails) == 1
+    t_fail, _, rid, server, _ = fails[0]
+    assert rid == -1 and server == 1
+    requeues = [e for e in tr if e[1] == "requeue"]
+    assert requeues and all(e[0] == t_fail and e[3] == 1 for e in requeues)
+    # a requeued rid is re-dispatched somewhere else at/after the fail
+    re_rids = {e[2] for e in requeues}
+    later = [e for e in tr if e[1] == "dispatch" and e[2] in re_rids
+             and e[0] >= t_fail]
+    assert {e[2] for e in later} == re_rids
+    # the dead server never receives another dispatch
+    assert not [e for e in tr if e[1] == "dispatch" and e[3] == 1
+                and e[0] >= t_fail]
+
+
+def test_autoscaler_grows_under_flash_crowd():
+    res, tr = _run(
+        wl="bimodal:n=400,seed=5,load=1.2|flash:at=200,x=4,dur=300",
+        scaling="scale:min=1,T=20,up=0.5,down=0.05")
+    assert res.n == 400
+    scales = [e for e in tr if e[1] == "scale"]
+    assert scales and all(e[2] == -1 for e in scales)
+    assert any(e[4] == 1 for e in scales)          # scaled up under load
+    # dispatches only ever land on servers activated by then; the
+    # autoscaler evaluates at the top of the tick, before routing, so
+    # same-tick scale toggles apply first (canonical order sorts by
+    # KINDS, which would replay them after the dispatches)
+    active = {0}
+    events = sorted(tr, key=lambda e: (e[0], e[1] != "scale"))
+    for t, kind, rid, server, aux in events:
+        if kind == "scale":
+            (active.add if aux > 0 else active.discard)(server)
+        elif kind == "dispatch":
+            assert server in active, (t, rid, server)
+
+
+def test_history_predictor_window_tracks_drift():
+    from repro.core.predict import make_predictor
+    p = make_predictor("history:window=4")
+    legacy = make_predictor("history")
+    for v in [10.0] * 20 + [100.0] * 4:
+        p.observe(1, v)
+        legacy.observe(1, v)
+    assert p.predict(1) == 100.0                   # windowed mean adapted
+    assert legacy.predict(1) < 30.0                # running mean lags
+    with pytest.raises(ValueError, match="window"):
+        make_predictor("history:window=0")

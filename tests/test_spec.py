@@ -12,9 +12,9 @@ from repro.core import (ClusterSimConfig, FaaSBenchConfig, SimConfig,
                         generate, simulate_cluster)
 from repro.core.spec import (DES_POLICIES, DISPATCH_REGISTRY,
                              PREDICTOR_REGISTRY, SCHEDULER_REGISTRY,
-                             DispatchSpec, ExperimentSpec, PredictorSpec,
-                             SchedulerSpec, ServerSpec, TickWorkloadSpec,
-                             run_experiment)
+                             WORKLOAD_REGISTRY, DispatchSpec, ExperimentSpec,
+                             PredictorSpec, SchedulerSpec, ServerSpec,
+                             TickWorkloadSpec, run_experiment)
 
 # ---------------------------------------------------------------------------
 # Registries replace the factory dicts
@@ -27,6 +27,8 @@ def test_registries_cover_legacy_names():
     assert set(PREDICTOR_REGISTRY.names()) == {
         "oracle", "none", "history", "class"}
     assert set(SCHEDULER_REGISTRY.names()) == {"sfs", "cfs", "fifo", "srtf"}
+    assert set(WORKLOAD_REGISTRY.names()) == {
+        "bimodal", "zipf", "drift", "flash", "diurnal"}
 
 
 def test_registry_unknown_name_lists_alternatives():

@@ -232,5 +232,12 @@ def test_spec_json_round_trip_faas():
 
 
 def test_all_kinds_have_an_order():
-    assert len(KINDS) == 7 and KINDS[0] == "arrival"
+    assert len(KINDS) == 11 and KINDS[0] == "arrival"
     assert KINDS[-1] == "complete"
+    # the PR 9 lifecycle kinds are first-class members of the canonical
+    # order (docs/OBSERVABILITY.md): cold_start sits between dispatch
+    # and admit (charged at delivery), fail/requeue/scale after preempt
+    assert {"cold_start", "fail", "requeue", "scale"} <= set(KINDS)
+    assert KINDS.index("dispatch") < KINDS.index("cold_start") \
+        < KINDS.index("admit")
+    assert KINDS.index("fail") < KINDS.index("requeue")
