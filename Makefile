@@ -3,7 +3,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast test-jax lint bench-smoke bench-predict \
-  bench-fleet bench-elastic bench bench-json bench-gate trace-demo
+  bench-fleet bench-elastic bench-chaos bench bench-json bench-gate \
+  trace-demo
 
 # the tier-1 command (ROADMAP.md)
 test:
@@ -48,13 +49,21 @@ bench-fleet:
 bench-elastic:
 	$(PY) benchmarks/cluster_sweep.py --elastic
 
+# <60 s chaos scenario: correlated fault episodes with recovery,
+# request timeouts/retries with backoff, and admission shedding
+# (asserts the short-P99 headline survives faults; docs/CLUSTER.md
+# "Chaos and graceful degradation")
+bench-chaos:
+	$(PY) benchmarks/cluster_sweep.py --chaos
+
 # CI perf trajectory: smoke cluster+predict suites with machine-readable
 # BENCH_*.json output (uploaded as artifacts), then the regression gate
-# against benchmarks/baselines/.  fleet1024 and elastic run first so
-# their artifacts are fresh when the cluster suite distills
+# against benchmarks/baselines/.  fleet1024, elastic and chaos run
+# first so their artifacts are fresh when the cluster suite distills
 # BENCH_cluster.json.
 bench-json:
-	$(PY) -m benchmarks.run --smoke --json fleet1024 elastic cluster predict
+	$(PY) -m benchmarks.run --smoke --json fleet1024 elastic chaos \
+	  cluster predict
 
 bench-gate:
 	$(PY) benchmarks/check_regression.py

@@ -50,8 +50,13 @@ def _abs_slack(row: dict) -> float:
 
 # metrics + telemetry metadata: everything here is an output of the
 # run, not part of a row's identity ("provenance" and "phases" are
-# nested dicts anyway — unhashable as key material)
-NON_IDENTITY = ("short_p99", "long_p99", "wall_s", "provenance", "phases")
+# nested dicts anyway — unhashable as key material).  "shed" is a
+# metric too: chaos scenarios drop requests at admission, so the
+# completion count backing the percentiles varies with the policy
+# under test — a row must still match its baseline cell when its shed
+# count moves.
+NON_IDENTITY = ("short_p99", "long_p99", "wall_s", "provenance", "phases",
+                "shed")
 
 
 def _key(row: dict) -> tuple:

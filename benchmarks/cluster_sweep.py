@@ -40,9 +40,15 @@ hash at load >= 0.8, in the uniform sweep, the mixed pool AND the
 64-engine fleet.  The ``--fleet1024`` invocation applies the same check
 to the 1024-engine cells.
 
+A **chaos** scenario (``--chaos``, own invocation) runs 16 engines x 4
+lanes under correlated fault episodes with recovery, request timeouts
+retried with backoff, and admission shedding — graceful degradation
+under faults, gated in ``BENCH_cluster.json`` like the rest.
+
 Usage:
   PYTHONPATH=src python benchmarks/cluster_sweep.py [--smoke] [--des]
   PYTHONPATH=src python benchmarks/cluster_sweep.py --fleet1024
+  PYTHONPATH=src python benchmarks/cluster_sweep.py --chaos
 """
 from __future__ import annotations
 
@@ -82,13 +88,14 @@ MIXED_SERVERS = (ServerSpec(cores=6), ServerSpec(cores=6),
 def run_tick(policy: str, servers: tuple, load: float, *, n: int,
              seed: int, scenario: str = "uniform",
              backend: str = "tick", workload: str = None,
-             lifecycle: str = None, scaling: str = None) -> dict:
+             lifecycle: str = None, scaling: str = None,
+             faults: str = None, retry: str = None) -> dict:
     from repro.core.telemetry import Telemetry
     spec = ExperimentSpec(
         engine=backend, servers=servers, dispatch=policy,
         workload=(workload if workload is not None
                   else TickWorkloadSpec(n=n, load=load, seed=seed)),
-        lifecycle=lifecycle, scaling=scaling)
+        lifecycle=lifecycle, scaling=scaling, faults=faults, retry=retry)
     # profile-only telemetry keeps every fast path (gap advance + scan
     # windows) live, so the phase breakdown rides along at no perf cost
     tel = Telemetry(profile=True)
@@ -97,7 +104,14 @@ def run_tick(policy: str, servers: tuple, load: float, *, n: int,
         "layer": "tick-engine", "scenario": scenario, "policy": policy,
         "backend": backend,
         "engines": len(servers), "lanes": [s.cores for s in servers],
-        "load": load, "n": res.n, "wall_s": res.wall_s,
+        # n is row identity in the perf gate, so report the SUBMITTED
+        # count: chaos rows shed a policy-dependent share of arrivals,
+        # and completions alone would desync baseline matching the
+        # moment a shed count moves
+        "load": load, "n": res.n + res.shed, "wall_s": res.wall_s,
+        # shed requests are their own metric: excluded from the
+        # completion arrays behind the percentiles, reported per row
+        "shed": res.shed,
         "dispatch_counts": res.dispatch_counts,
         "overload_bypasses": res.overload_bypasses,
         "buckets": res.buckets(),
@@ -233,6 +247,45 @@ def run_elastic(n: int) -> list:
     return rows
 
 
+def run_chaos(n: int) -> list:
+    """``--chaos``: the graceful-degradation scenario (docs/CLUSTER.md
+    "Chaos and graceful degradation") — 16 engines x 4 lanes through
+    the vector backend under the full chaos stack: Zipf popularity
+    feeding keep-alive cold starts, correlated failure episodes (blast
+    radius 4) with recovery re-entering dispatch cold, per-request
+    timeouts retried with exponential backoff under a budget, and an
+    admission watermark shedding arrivals when outstanding work per
+    lane crosses it.  sfs-aware vs hash, loads 0.6 / 0.8; rows join the
+    gated BENCH_cluster.json family and the headline check applies at
+    0.8 — short P99 must survive faults, not just steady state.  The
+    two loads pin the two regimes: at 0.6 the fleet absorbs a blast-4
+    outage outright (zero shed, no timeouts), while at 0.8 the same
+    outage forces degradation — requests time out, retry, and shed —
+    and the policy under test decides whether short functions drown
+    in the backlog (hash) or stay protected (sfs-aware).  Shed
+    requests are excluded from the completion percentiles and reported
+    as their own ``shed`` column (a metric, never row identity — the
+    gate in check_regression.py treats it like wall_s)."""
+    servers = uniform_servers(16, 4)
+    rows = []
+    for load in (0.6, 0.8):
+        wl = f"bimodal:n={n},seed=7,load={load}|zipf:funcs=16,s=1.1"
+        print(f"tick-engine CHAOS (vector backend): engines=16 lanes=4 "
+              f"load={load} n={n}")
+        for pol in ("sfs-aware", "hash"):
+            r = run_tick(
+                pol, servers, load, n=n, seed=7, scenario="chaos",
+                backend="vector", workload=wl,
+                lifecycle="lifecycle:cold=2,ttl=400,cap=8",
+                faults="faults:mttf=1200,mttr=250,blast=4,episodes=3,"
+                       "seed=13,first=800",
+                retry="retry:timeout=400,retries=2,backoff=16,shed=10")
+            rows.append(r)
+            print_row(r, SHORT_LABEL)
+            print(f"    shed={r['shed']}")
+    return rows
+
+
 def run_trace_demo(out_path: str, n: int) -> int:
     """``--trace``: render one sfs-aware-vs-hash lifecycle trace of the
     fleet64 smoke scenario (64 engines x 4 lanes, vector backend, load
@@ -268,6 +321,11 @@ def main(argv=None):
                     help="run ONLY the lifecycle scenario (cold starts + "
                          "flash crowd + failure + autoscaling; own <60 s "
                          "budget; asserts its headline claim)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run ONLY the chaos scenario (correlated fault "
+                         "episodes with recovery + timeouts/retries + "
+                         "shedding; own <60 s budget; asserts its "
+                         "headline claim)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="write ONE sfs-aware-vs-hash Perfetto trace of "
                          "the fleet64 smoke scenario and exit")
@@ -287,6 +345,12 @@ def main(argv=None):
     if args.elastic:
         rows = run_elastic(args.n or 20_000)
         path = save("cluster_elastic", {"rows": rows})
+        print("saved", path)
+        return check_headline(rows, hard=True)
+
+    if args.chaos:
+        rows = run_chaos(args.n or 20_000)
+        path = save("cluster_chaos", {"rows": rows})
         print("saved", path)
         return check_headline(rows, hard=True)
 

@@ -41,18 +41,21 @@ SUITES = {
     "roofline": roofline,
     "fleet1024": cluster_sweep,     # before "cluster": their artifacts
     "elastic": cluster_sweep,       # must be fresh when cluster distills
+    "chaos": cluster_sweep,
     "cluster": cluster_sweep,
     "predict": predict_sweep,
 }
 
 
 # suites whose main(argv) takes CLI flags (--smoke pass-through)
-ARGV_SUITES = {"cluster", "fleet1024", "elastic", "predict"}
+ARGV_SUITES = {"cluster", "fleet1024", "elastic", "chaos", "predict"}
 
-# per-suite forced flags: "fleet1024" / "elastic" are cluster_sweep's
-# standalone invocations (each with its own <60 s budget) — the
-# 1024-engine jax-backend fleet and the lifecycle scenario
-SUITE_FLAGS = {"fleet1024": ["--fleet1024"], "elastic": ["--elastic"]}
+# per-suite forced flags: "fleet1024" / "elastic" / "chaos" are
+# cluster_sweep's standalone invocations (each with its own <60 s
+# budget) — the 1024-engine jax-backend fleet, the lifecycle scenario,
+# and the fault/timeout/shedding scenario
+SUITE_FLAGS = {"fleet1024": ["--fleet1024"], "elastic": ["--elastic"],
+               "chaos": ["--chaos"]}
 
 # --json distillation: suite -> (artifact names, row key fields).  "n"
 # is part of a row's identity: smoke and full runs sweep the same cells
@@ -64,7 +67,8 @@ SUITE_FLAGS = {"fleet1024": ["--fleet1024"], "elastic": ["--elastic"]}
 # artifact is skipped here and surfaces as dropped baseline rows in the
 # gate).
 BENCH_JSON = {
-    "cluster": (("cluster_sweep", "cluster_fleet1024", "cluster_elastic"),
+    "cluster": (("cluster_sweep", "cluster_fleet1024", "cluster_elastic",
+                 "cluster_chaos"),
                 ("layer", "scenario", "backend", "policy",
                  "engines", "load", "n")),
     "predict": (("predict_sweep",), ("predictor", "dispatch", "load", "iat",
@@ -101,6 +105,10 @@ def write_bench_json(name: str, out_dir: str = ".") -> str:
                 row["provenance"] = r["provenance"]
             if "phases" in r:
                 row["phases"] = r["phases"]
+            # chaos rows: shed requests are excluded from the
+            # percentiles above, so carry the count as its own metric
+            if "shed" in r:
+                row["shed"] = r["shed"]
             rows.append(row)
     payload = {
         "suite": name,

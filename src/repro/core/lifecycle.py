@@ -63,7 +63,10 @@ class Autoscaler:
     utilization ``load / active lanes`` above ``up`` activates up to
     ``step`` drained servers (lowest index first, capped at ``max``);
     below ``down`` it drains up to ``step`` active servers (highest
-    index first, floored at ``min``).  Dead servers never reactivate.
+    index first, floored at ``min``).  Dead servers never reactivate
+    through scaling — a server killed by a :class:`FaultTimeline`
+    episode only returns when its scheduled recovery removes it from
+    ``dead`` (``core/chaos.py``), after which scale-up may re-admit it.
     """
 
     __slots__ = ("n", "lanes", "min", "max", "period", "up", "down",
@@ -102,9 +105,14 @@ class Autoscaler:
         return []
 
 
-def lifecycle_horizon(t, fail_at, scaler: Optional[Autoscaler]):
+def lifecycle_horizon(t, fail_at, scaler: Optional[Autoscaler],
+                      extras=()):
     """Earliest future time a lifecycle decision can fire at/after ``t``
-    (a pending failure or the next autoscale boundary), or None when no
+    (a pending failure, the next autoscale boundary, or any of the
+    ``extras`` — chaos boundaries like the next
+    :meth:`~repro.core.chaos.FaultTimeline.next_time` fault/recovery
+    or :meth:`~repro.core.chaos.RetryWatchdog.next_boundary` deadline/
+    backoff release; None entries are ignored), or None when no
     decision is pending.  Event-driven backends (the jax fast-forward,
     the DES event heap) must not advance past it without evaluating the
     decision at exactly that time."""
@@ -115,4 +123,9 @@ def lifecycle_horizon(t, fail_at, scaler: Optional[Autoscaler]):
         p = scaler.period
         b = t if t % p == 0 else (t // p + 1) * p
         h = b if h is None else min(h, b)
+    for x in extras:
+        if x is None:
+            continue
+        x = x if x > t else t
+        h = x if h is None else min(h, x)
     return h

@@ -37,9 +37,11 @@ from typing import Optional
 from repro.core.dispatch import (BoundedTimeline, PullDispatch, ServerView,
                                  make_dispatch,
                                  route_hinted)
+from repro.core.chaos import FaultTimeline, RetryWatchdog
 from repro.core.lifecycle import Autoscaler, WarmSet
 from repro.core.predict import make_predictor
-from repro.core.spec import LifecycleSpec, ScalingSpec, resolve_dispatch
+from repro.core.spec import (FaultSpec, LifecycleSpec, RetrySpec,
+                             ScalingSpec, resolve_dispatch)
 from repro.core.workload import Request
 
 _EPS = 1e-12
@@ -268,6 +270,69 @@ class Simulator:
 
     def idle_cores(self) -> int:
         return sum(1 for c in self.cores if c.state == "idle")
+
+    # -- chaos eviction (cluster mode) --------------------------------------
+    def evict_rid(self, rid: int):
+        """Remove one unfinished request wholesale — queued, running,
+        mid-I/O, or still in flight — and return its workload Request
+        (None when absent or already finished).  The timeout/hedge
+        eviction seam: the cluster owner re-dispatches or sheds the
+        request, and must follow with :meth:`kick` to refill any freed
+        core.  The partial segment of a running victim is not charged
+        to ``busy_time`` (mirrors a server failure's eviction)."""
+        req = next((r for r in self.reqs if r.rid == rid), None)
+        if req is None:
+            return None
+        job = self.jobs.get(rid)
+        if job is not None and job.finish is not None:
+            return None
+        self.reqs = [r for r in self.reqs if r.rid != rid]
+        self.jobs.pop(rid, None)
+        self.eta_hints.pop(rid, None)
+        if job is not None:
+            if job in self.global_queue:
+                self.global_queue.remove(job)
+            if any(e[2] is job for e in self.cfs_rq):
+                self.cfs_rq = [e for e in self.cfs_rq if e[2] is not job]
+                heapq.heapify(self.cfs_rq)
+            if any(e[2] is job for e in self.srtf_wait):
+                self.srtf_wait = [e for e in self.srtf_wait
+                                  if e[2] is not job]
+                heapq.heapify(self.srtf_wait)
+            for core in self.cores:
+                if core.job is job:
+                    # the running segment's event dies via the token bump
+                    core.token += 1
+                    core.job, core.state = None, "idle"
+        # drop the request's own pending events: an in-flight arrival
+        # (nonzero dispatch latency) and any I/O wake-ups — core
+        # segment events already died with the token bump above
+        keep = [ev for ev in self.events if not self._owns_event(ev, rid)]
+        if len(keep) != len(self.events):
+            self.events = keep
+            heapq.heapify(self.events)
+        return req
+
+    @staticmethod
+    def _owns_event(ev, rid: int) -> bool:
+        kind, data = ev[2], ev[3]
+        if kind in ("arrival", "s_arrival"):
+            return data[0].rid == rid
+        if kind in ("f_io_done", "c_io_done", "s_io_done",
+                    "obliv_io_to_cfs"):
+            return data[0] == rid
+        return False
+
+    def kick(self):
+        """Refill cores after an out-of-band eviction (the normal finish
+        path refills from its own event handler)."""
+        if self.cfg.policy == "srtf":
+            for core in self.cores:
+                if core.state == "idle" and self.srtf_wait:
+                    _, _, nxt = heapq.heappop(self.srtf_wait)
+                    self._srtf_start(core, nxt)
+        else:
+            self._dispatch(self.now)
 
     # -- public entry ---------------------------------------------------------
     def run(self) -> SimResult:
@@ -766,6 +831,11 @@ class ClusterSimConfig:
     # form — knob times are float DES seconds here
     lifecycle: object = None
     scaling: object = None
+    # chaos subsystem (core/chaos.py): correlated failure episodes with
+    # recovery (FaultSpec) and request timeouts/retries/hedging/
+    # shedding (RetrySpec) — knob times are float DES seconds here
+    faults: object = None
+    retry: object = None
 
     def server_configs(self) -> list:
         """The per-server SimConfig list both modes reduce to."""
@@ -787,7 +857,8 @@ class ClusterSimConfig:
                                       slice_init=self.slice_init_s),
             predictor=self.predictor, workload=workload,
             dispatch_latency=self.dispatch_latency_s,
-            lifecycle=self.lifecycle, scaling=self.scaling)
+            lifecycle=self.lifecycle, scaling=self.scaling,
+            faults=self.faults, retry=self.retry)
 
 
 @dataclasses.dataclass
@@ -871,6 +942,20 @@ class ClusterSimulator:
         if self._scaler is not None:
             self._active = self._scaler.initial_active()
             self.policy.set_active(self._active)
+        # -- chaos (docs/CLUSTER.md "Chaos and graceful degradation"):
+        # the same deterministic state machines as the tick frontend
+        # (repro.core.chaos), run in float DES seconds
+        fa = cfg.faults
+        self.faults = FaultSpec.parse(fa) if isinstance(fa, str) else fa
+        rt = cfg.retry
+        self.retry = RetrySpec.parse(rt) if isinstance(rt, str) else rt
+        self._timeline = (FaultTimeline(self.faults, len(self.servers),
+                                        integral=False)
+                          if self.faults is not None else None)
+        self._watchdog = (RetryWatchdog(self.retry, integral=False)
+                          if self.retry is not None else None)
+        self._shed: list = []
+        self.chaos_counts = {"shed": 0, "timeout": 0, "retry": 0}
         # opt-in telemetry (core/telemetry.py), mirrors
         # ClusterFrontend.attach_telemetry; all None when disabled
         self.telemetry = None
@@ -907,12 +992,21 @@ class ClusterSimulator:
 
     # ------------------------------------------------------------------
     def _observe_finish(self, req: Request, t: float):
+        if self._watchdog is not None:
+            self._watchdog.complete(req.rid)
         self.predictor.observe(req.func_id, req.service)
 
     def _deliver(self, idx: int, req: Request, t: float,
                  eta: Optional[float] = None):
         self.policy.record(idx)
         if self._warm is not None:
+            # coldness is a per-dispatch decision: a re-dispatched
+            # request (retry/hedge after an uncharged requeue) must not
+            # stack a second inflation on a stale one
+            stale = self._cold_extra.pop(req.rid, 0.0)
+            if stale:
+                req = dataclasses.replace(req,
+                                          service=req.service - stale)
             # cold start: extra service demand the moment the request
             # lands on a server whose container for this function is
             # absent or expired (the workload Request is frozen, so the
@@ -927,6 +1021,10 @@ class ClusterSimulator:
             self._warm.touch(idx, req.func_id, t)
         if self._trace is not None:
             self._trace.emit(t, "dispatch", req.rid, idx, eta)
+        if self._watchdog is not None:
+            # arm before injecting: a zero-latency instant completion
+            # must find the deadline live so complete() can cancel it
+            self._watchdog.on_dispatch(req.rid, idx, t, eta)
         srv = self.servers[idx]
         srv.inject(req, t + self.cfg.dispatch_latency_s, eta=eta)
         # process the due events now so the server's capacity/outstanding
@@ -971,11 +1069,10 @@ class ClusterSimulator:
         """Kill server ``idx`` at ``t`` and re-enter its evicted
         requests through normal dispatch — same orchestration as
         ``ClusterFrontend._fail``, in DES time."""
-        self._fail_at = None
         self._dead.add(idx)
         if self._warm is not None:
             self._warm.fail(idx)
-        tr, ser = self._trace, self._series
+        tr = self._trace
         if tr is not None:
             tr.emit(t, "fail", -1, idx)
         evicted = self._evict_server(idx)
@@ -984,23 +1081,131 @@ class ClusterSimulator:
                             if i not in self._dead]
         else:
             self._active = [i for i in self._active if i != idx]
+            if not self._active:
+                # the last routable server died while live spares sit
+                # drained: emergency-activate the lowest-index one so
+                # the evicted work (and future arrivals) can route
+                spare = min(i for i in range(len(self.servers))
+                            if i not in self._dead)
+                self._active = [spare]
+                if tr is not None:
+                    tr.emit(t, "scale", -1, spare, 1)
         self.policy.set_active(self._active)
+        wd = self._watchdog
         for req in sorted(evicted, key=lambda r: r.rid):
+            if wd is not None:
+                wd.disarm(req.rid)
             pen = self._cold_extra.pop(req.rid, 0.0)
             if pen:
                 req = dataclasses.replace(req, service=req.service - pen)
             if tr is not None:
                 tr.emit(t, "requeue", req.rid, idx)
-            ridx, eta = route_hinted(self.policy, self.predictor, req.rid,
-                                     req.func_id, req.service, t)
-            self.eta_log[req.rid] = eta
-            if ser is not None:
-                ser.counters["predictor_hits" if eta is not None
-                             else "predictor_misses"] += 1
-            if ridx is None:
-                self.central.append((req, eta))
+            self._redispatch(req, t)
+
+    def _maybe_fail(self, idx: int, t: float):
+        """A FaultTimeline failure event: skipped when the server is
+        already dead (overlapping episodes) or when killing it would
+        leave the fleet with no live server to route to."""
+        if idx in self._dead or len(self._dead) + 1 >= len(self.servers):
+            return
+        self._fail(idx, t)
+
+    def _recover(self, idx: int, t: float):
+        """A FaultTimeline repair completed: the server re-enters the
+        fleet empty and cold (its warm set was dropped at failure).
+        Without an autoscaler it rejoins the routable set immediately;
+        with one it comes back drained — the next scale-up may re-admit
+        it now that it is no longer dead."""
+        if idx not in self._dead:
+            return                       # never died (failure skipped)
+        self._dead.discard(idx)
+        if self._trace is not None:
+            self._trace.emit(t, "recover", -1, idx)
+        if self._scaler is None and self._active is not None:
+            self._active = sorted(set(self._active) | {idx})
+            self.policy.set_active(self._active)
+
+    def _watchdog_tick(self, t: float):
+        """Drain expired deadlines (timeouts + hedges) then released
+        backoff holds, in deterministic (time, rid) order — the same
+        decision sequence as ``ClusterFrontend._watchdog_tick``, with
+        the eviction done against the owning server's event heap."""
+        wd = self._watchdog
+        tr = self._trace
+        for rid, idx, kind in wd.expired(t):
+            srv = self.servers[idx]
+            req = srv.evict_rid(rid)
+            if req is None:              # defensive: state drifted
+                continue
+            srv.now = max(srv.now, t)
+            srv.kick()
+            pen = self._cold_extra.pop(rid, 0.0)
+            if pen:
+                req = dataclasses.replace(req, service=req.service - pen)
+            if kind == "hedge":
+                # straggler relocation: cancel-and-redispatch once,
+                # without burning retry budget
+                wd.mark_hedged(rid)
+                self.chaos_counts["retry"] += 1
+                if tr is not None:
+                    tr.emit(t, "retry", rid, idx, 1)
+                self._redispatch(req, t)
+                continue
+            self.chaos_counts["timeout"] += 1
+            if tr is not None:
+                tr.emit(t, "timeout", rid, idx)
+            attempt = wd.record_timeout(rid)
+            if wd.exhausted(rid):
+                # retry budget spent: shed instead of retrying
+                wd.forget(rid)
+                self.chaos_counts["shed"] += 1
+                self._shed.append(req)
+                if tr is not None:
+                    tr.emit(t, "shed", rid, idx)
+                continue
+            release = wd.backoff_until(t, attempt)
+            if release <= t:
+                self.chaos_counts["retry"] += 1
+                if tr is not None:
+                    tr.emit(t, "retry", rid, idx)
+                self._redispatch(req, t)
             else:
-                self._deliver(ridx, req, t, eta)
+                wd.hold(rid, req, release)
+        for rid, req in wd.released(t):
+            self.chaos_counts["retry"] += 1
+            if tr is not None:
+                tr.emit(t, "retry", rid, -1)
+            self._redispatch(req, t)
+
+    def _redispatch(self, req: Request, t: float):
+        """Re-enter a requeued/retried request through normal dispatch."""
+        ridx, eta = route_hinted(self.policy, self.predictor, req.rid,
+                                 req.func_id, req.service, t)
+        self.eta_log[req.rid] = eta
+        if self._series is not None:
+            self._series.counters["predictor_hits" if eta is not None
+                                  else "predictor_misses"] += 1
+        if ridx is None:
+            self.central.append((req, eta))
+        else:
+            self._deliver(ridx, req, t, eta)
+
+    def _shed_check(self, req: Request, t: float) -> bool:
+        """Admission control: drop a fresh arrival while outstanding
+        work per active lane sits at/above the ``shed`` watermark."""
+        mark = self._watchdog.shed
+        views = (self.views if self._active is None
+                 else [self.views[i] for i in self._active])
+        load = sum(v.outstanding() for v in views) \
+            + len(self.central) + self._watchdog.pending()
+        lanes = sum(v.lanes for v in views) or 1
+        if load < mark * lanes:
+            return False
+        self.chaos_counts["shed"] += 1
+        self._shed.append(req)
+        if self._trace is not None:
+            self._trace.emit(t, "shed", req.rid)
+        return True
 
     def _autoscale(self, t: float):
         load = sum(v.outstanding() for v in self.views) + len(self.central)
@@ -1026,19 +1231,37 @@ class ClusterSimulator:
             t_arr = self.reqs[i].arrival if i < n else _INF
             t_srv = min((s.next_event_time() for s in self.servers),
                         default=_INF)
-            if t_arr == _INF and t_srv == _INF:
+            # a pending backoff hold or armed deadline keeps the loop
+            # alive past the last server event — its release re-enters
+            # dispatch and creates new work
+            t_wd = (self._watchdog.next_boundary()
+                    if self._watchdog is not None else None)
+            if t_arr == _INF and t_srv == _INF and t_wd is None:
                 break
             # lifecycle decisions fire before any arrival or server
             # event at the same instant — the tick backends evaluate
             # them at the top of the tick, before routing
             t_fail = self._fail_at if self._fail_at is not None else _INF
             t_sc = self._next_scale if self._scaler is not None else _INF
-            t_life = min(t_fail, t_sc)
+            t_tl = (self._timeline.next_time()
+                    if self._timeline is not None else None)
+            t_life = min(t_fail, t_sc,
+                         t_tl if t_tl is not None else _INF,
+                         t_wd if t_wd is not None else _INF)
             if t_life <= min(t_arr, t_srv):
                 if ser is not None:
                     self._sample_to(t_life)
+                if self._timeline is not None:
+                    for _, ekind, sidx in self._timeline.due(t_life):
+                        if ekind == "recover":
+                            self._recover(sidx, t_life)
+                        else:
+                            self._maybe_fail(sidx, t_life)
                 if t_fail <= t_life:
+                    self._fail_at = None
                     self._fail(self._fail_server, t_life)
+                if self._watchdog is not None:
+                    self._watchdog_tick(t_life)
                 if self._scaler is not None and t_sc <= t_life:
                     self._autoscale(t_life)
                     self._next_scale += self._scaler.period
@@ -1051,6 +1274,10 @@ class ClusterSimulator:
                     self._sample_to(req.arrival)
                 if tr is not None:
                     tr.emit(req.arrival, "arrival", req.rid)
+                if (self._watchdog is not None
+                        and self._watchdog.shed is not None
+                        and self._shed_check(req, req.arrival)):
+                    continue
                 idx, eta = route_hinted(self.policy, self.predictor,
                                         req.rid, req.func_id, req.service,
                                         req.arrival)

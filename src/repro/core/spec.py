@@ -51,8 +51,9 @@ __all__ = [
     "Registry", "SCHEDULER_REGISTRY", "DISPATCH_REGISTRY",
     "PREDICTOR_REGISTRY", "WORKLOAD_REGISTRY", "DES_POLICIES",
     "SchedulerSpec", "DispatchSpec", "PredictorSpec", "LifecycleSpec",
-    "ScalingSpec", "ServerSpec", "TickWorkloadSpec", "WorkloadStageSpec",
-    "WorkloadSpec", "ExperimentSpec", "ExperimentResult", "run_experiment",
+    "ScalingSpec", "FaultSpec", "RetrySpec", "ServerSpec",
+    "TickWorkloadSpec", "WorkloadStageSpec", "WorkloadSpec",
+    "ExperimentSpec", "ExperimentResult", "run_experiment",
     "resolve_dispatch",
 ]
 
@@ -462,6 +463,159 @@ class ScalingSpec(_SpecBase):
         return self.kwargs.get("step", 1)
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultSpec(_SpecBase):
+    """Correlated, repeated failure episodes with recovery
+    (docs/CLUSTER.md "Chaos and graceful degradation").
+
+    Replaces the one-shot ``fail_at``/``fail_server`` pair with a
+    deterministic schedule precomputed by
+    :class:`~repro.core.chaos.FaultTimeline` — every backend replays
+    the same events.  Knobs (engine-native time units):
+
+    * ``mttf`` — mean time to failure: episode gaps draw
+      ``Exp(mttf)`` from ``seed`` (required, > 0).
+    * ``mttr`` — mean time to repair; the blast group recovers after
+      ``Exp(mttr)`` and re-enters dispatch cold.  Omitted/None makes
+      failures permanent.
+    * ``blast`` — blast radius: each episode kills ``blast``
+      consecutive servers (correlated failure; default 1).
+    * ``episodes`` — number of failure episodes (default 1).
+    * ``seed`` — RNG seed for the schedule (default 0).
+    * ``first`` — pins the first episode's failure time exactly
+      (later episodes still draw from the RNG).
+    """
+
+    name: str = "faults"
+    args: tuple = ()
+
+    _KNOWN = ("mttf", "mttr", "blast", "episodes", "seed", "first")
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.name != "faults":
+            raise ValueError(f"FaultSpec name must be 'faults', "
+                             f"got {self.name!r}")
+        for k, _ in self.args:
+            if k not in self._KNOWN:
+                raise ValueError(f"unknown faults knob {k!r}; expected "
+                                 f"one of {self._KNOWN}")
+        if self.mttf is None or self.mttf <= 0:
+            raise ValueError("faults mttf is required and must be > 0")
+        if self.mttr is not None and self.mttr <= 0:
+            raise ValueError("faults mttr must be > 0 (omit for "
+                             "permanent failure)")
+        if self.blast < 1:
+            raise ValueError("faults blast must be >= 1")
+        if self.episodes < 1:
+            raise ValueError("faults episodes must be >= 1")
+
+    @property
+    def mttf(self):
+        return self.kwargs.get("mttf")
+
+    @property
+    def mttr(self):
+        return self.kwargs.get("mttr")
+
+    @property
+    def blast(self) -> int:
+        return self.kwargs.get("blast", 1)
+
+    @property
+    def episodes(self) -> int:
+        return self.kwargs.get("episodes", 1)
+
+    @property
+    def seed(self) -> int:
+        return self.kwargs.get("seed", 0)
+
+    @property
+    def first(self):
+        return self.kwargs.get("first")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrySpec(_SpecBase):
+    """Request-level robustness: timeouts, retries, hedging, shedding
+    (docs/CLUSTER.md "Chaos and graceful degradation").
+
+    Runtime lives in :class:`~repro.core.chaos.RetryWatchdog`.  Knobs
+    (engine-native time units; at least one of ``timeout`` / ``hedge``
+    / ``shed`` must be set):
+
+    * ``timeout`` — per-dispatch deadline; an expiry evicts the
+      request and retries it through normal dispatch.
+    * ``retries`` (alias ``budget``) — retry budget: after this many
+      timeouts the next expiry sheds the request (default 1).
+    * ``backoff`` / ``factor`` — exponential backoff: retry ``k``
+      waits ``backoff * factor^(k-1)`` before re-dispatch (default
+      0 == immediate, factor 2.0).
+    * ``hedge`` — straggler relocation: a request still running at
+      ``hedge x`` its routing ETA is re-dispatched once (cancel-and-
+      relocate, not duplicate), without burning retry budget.
+    * ``shed`` — admission watermark: a fresh arrival is dropped
+      (``shed`` event, excluded from completion percentiles) when
+      outstanding work per active lane is at or above it.
+    """
+
+    name: str = "retry"
+    args: tuple = ()
+
+    ALIASES = {"budget": "retries"}
+    _KNOWN = ("timeout", "retries", "backoff", "factor", "hedge", "shed")
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.name != "retry":
+            raise ValueError(f"RetrySpec name must be 'retry', "
+                             f"got {self.name!r}")
+        for k, _ in self.args:
+            if k not in self._KNOWN:
+                raise ValueError(f"unknown retry knob {k!r}; expected "
+                                 f"one of {self._KNOWN}")
+        if (self.timeout is None and self.hedge is None
+                and self.shed is None):
+            raise ValueError("retry spec needs at least one of "
+                             "timeout / hedge / shed")
+        if self.timeout is not None and self.timeout <= 0:
+            raise ValueError("retry timeout must be > 0")
+        if self.retries < 0:
+            raise ValueError("retry retries must be >= 0")
+        if self.backoff < 0:
+            raise ValueError("retry backoff must be >= 0")
+        if self.factor <= 0:
+            raise ValueError("retry factor must be > 0")
+        if self.hedge is not None and self.hedge <= 0:
+            raise ValueError("retry hedge must be > 0")
+        if self.shed is not None and self.shed <= 0:
+            raise ValueError("retry shed must be > 0")
+
+    @property
+    def timeout(self):
+        return self.kwargs.get("timeout")
+
+    @property
+    def retries(self) -> int:
+        return self.kwargs.get("retries", 1)
+
+    @property
+    def backoff(self):
+        return self.kwargs.get("backoff", 0)
+
+    @property
+    def factor(self) -> float:
+        return self.kwargs.get("factor", 2.0)
+
+    @property
+    def hedge(self):
+        return self.kwargs.get("hedge")
+
+    @property
+    def shed(self):
+        return self.kwargs.get("shed")
+
+
 # ---------------------------------------------------------------------------
 # Server / workload / experiment specs
 # ---------------------------------------------------------------------------
@@ -723,7 +877,11 @@ class ExperimentSpec:
     (the tick engine has no latency model; it must stay 0 there).
     ``lifecycle`` / ``scaling`` opt the fleet into cold starts,
     failure/drain and autoscaling (:class:`LifecycleSpec` /
-    :class:`ScalingSpec`, all four backends).
+    :class:`ScalingSpec`, all four backends); ``faults`` / ``retry``
+    opt into the chaos subsystem — correlated failure episodes with
+    recovery and request timeouts/retries/hedging/shedding
+    (:class:`FaultSpec` / :class:`RetrySpec`,
+    :mod:`repro.core.chaos`, all four backends).
 
     ``engine="vector"`` runs tick semantics through the struct-of-arrays
     stepping backend (:mod:`repro.serving.vector_cluster`): homogeneous
@@ -741,6 +899,8 @@ class ExperimentSpec:
     dispatch_latency: float = 0.0
     lifecycle: object = None                 # None | LifecycleSpec | str
     scaling: object = None                   # None | ScalingSpec | str
+    faults: object = None                    # None | FaultSpec | str
+    retry: object = None                     # None | RetrySpec | str
 
     def __post_init__(self):
         if self.engine not in ("des", "tick", "vector", "jax"):
@@ -777,6 +937,22 @@ class ExperimentSpec:
                 and not isinstance(self.scaling, ScalingSpec):
             raise TypeError(f"scaling must be a ScalingSpec or its "
                             f"string form, got {self.scaling!r}")
+        if isinstance(self.faults, str):
+            object.__setattr__(self, "faults", FaultSpec.parse(self.faults))
+        if self.faults is not None \
+                and not isinstance(self.faults, FaultSpec):
+            raise TypeError(f"faults must be a FaultSpec or its "
+                            f"string form, got {self.faults!r}")
+        if isinstance(self.retry, str):
+            object.__setattr__(self, "retry", RetrySpec.parse(self.retry))
+        if self.retry is not None \
+                and not isinstance(self.retry, RetrySpec):
+            raise TypeError(f"retry must be a RetrySpec or its "
+                            f"string form, got {self.retry!r}")
+        if self.faults is not None and self.faults.blast > len(servers):
+            raise ValueError(
+                f"faults blast={self.faults.blast} exceeds the fleet "
+                f"size {len(servers)}")
         if self.lifecycle is not None:
             fs = self.lifecycle.fail_server
             if not 0 <= fs < len(servers):
@@ -818,6 +994,10 @@ class ExperimentSpec:
                            else str(self.lifecycle)),
              "scaling": (None if self.scaling is None
                          else str(self.scaling)),
+             "faults": (None if self.faults is None
+                        else str(self.faults)),
+             "retry": (None if self.retry is None
+                       else str(self.retry)),
              "workload": None}
         wl = self.workload
         if isinstance(wl, WorkloadSpec):
@@ -860,7 +1040,8 @@ class ExperimentSpec:
                    dispatch=d["dispatch"], predictor=d["predictor"],
                    workload=workload,
                    dispatch_latency=d.get("dispatch_latency", 0.0),
-                   lifecycle=d.get("lifecycle"), scaling=d.get("scaling"))
+                   lifecycle=d.get("lifecycle"), scaling=d.get("scaling"),
+                   faults=d.get("faults"), retry=d.get("retry"))
 
     # -- converters -----------------------------------------------------
     def to_cluster_sim_config(self):
@@ -870,14 +1051,17 @@ class ExperimentSpec:
             servers=[s.to_sim_config() for s in self.servers],
             dispatch=self.dispatch, predictor=self.predictor,
             dispatch_latency_s=self.dispatch_latency,
-            lifecycle=self.lifecycle, scaling=self.scaling)
+            lifecycle=self.lifecycle, scaling=self.scaling,
+            faults=self.faults, retry=self.retry)
 
     def to_cluster_config(self):
         from repro.serving.cluster import ClusterConfig
         return ClusterConfig(policy=self.dispatch,
                              predictor=self.predictor,
                              lifecycle=self.lifecycle,
-                             scaling=self.scaling)
+                             scaling=self.scaling,
+                             faults=self.faults,
+                             retry=self.retry)
 
 
 # ---------------------------------------------------------------------------
@@ -916,6 +1100,12 @@ class ExperimentResult:
     # the repro.core.telemetry.Telemetry session attached via
     # run_experiment(telemetry=...); None when telemetry was off
     telemetry: object = None
+    # chaos accounting (docs/CLUSTER.md): shed requests never finish,
+    # so they are excluded from every per-request array above and
+    # reported here as their own metric — P99 claims stay honest
+    shed: int = 0
+    timeouts: int = 0
+    retries: int = 0
 
     @property
     def n(self) -> int:
@@ -951,6 +1141,8 @@ class ExperimentResult:
             "dispatch_counts": list(self.dispatch_counts),
             "overload_bypasses": self.overload_bypasses,
             "wall_s": self.wall_s,
+            "shed": self.shed, "timeouts": self.timeouts,
+            "retries": self.retries,
         }
 
 
@@ -1031,7 +1223,15 @@ def _run_des(spec: ExperimentSpec, requests, t0: float,
         dispatch_counts=list(res.dispatch_counts),
         overload_bypasses=res.overload_bypasses,
         eta_log=dict(res.eta_log), dispatch_S=res.dispatch_S,
-        wall_s=time.perf_counter() - t0, raw=res, telemetry=tel)
+        wall_s=time.perf_counter() - t0, raw=res, telemetry=tel,
+        **_chaos_counts(sim))
+
+
+def _chaos_counts(owner) -> dict:
+    """ExperimentResult chaos fields from an engine's counters."""
+    cc = getattr(owner, "chaos_counts", None) or {}
+    return {"shed": cc.get("shed", 0), "timeouts": cc.get("timeout", 0),
+            "retries": cc.get("retry", 0)}
 
 
 def _run_tick(spec: ExperimentSpec, requests, t0: float,
@@ -1063,4 +1263,5 @@ def _run_tick(spec: ExperimentSpec, requests, t0: float,
         overload_bypasses=cluster.summary()["overload_bypasses"],
         eta_log=dict(cluster.eta_log),
         dispatch_S=getattr(cluster.policy, "S", None),
-        wall_s=time.perf_counter() - t0, raw=done, telemetry=tel)
+        wall_s=time.perf_counter() - t0, raw=done, telemetry=tel,
+        **_chaos_counts(cluster))

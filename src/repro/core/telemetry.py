@@ -35,15 +35,19 @@ from typing import Optional
 
 #: Canonical event kinds, in within-timestamp ordering.  ``arrival``,
 #: ``dispatch`` and the fleet-lifecycle kinds ``cold_start`` (aux =
-#: penalty charged), ``fail`` / ``scale`` (rid = -1; ``scale`` aux =
-#: +1 activate / -1 drain) and ``requeue`` (failed server's in-flight
-#: work re-entering dispatch) are emitted by the cluster frontend
-#: (shared code); ``admit``/``bypass``/``demote``/``preempt``/
-#: ``complete`` by the per-server scheduling backends.  See
-#: docs/OBSERVABILITY.md for the exact semantics of each kind per
+#: penalty charged), ``fail`` / ``scale`` / ``recover`` (rid = -1;
+#: ``scale`` aux = +1 activate / -1 drain) and ``requeue`` (failed
+#: server's in-flight work re-entering dispatch) are emitted by the
+#: cluster frontend (shared code), as are the chaos kinds ``shed``
+#: (arrival dropped at admission or on budget exhaustion), ``retry``
+#: (timed-out/hedged request re-entering dispatch) and ``timeout``
+#: (per-dispatch deadline expired); ``admit``/``bypass``/``demote``/
+#: ``preempt``/``complete`` by the per-server scheduling backends.
+#: See docs/OBSERVABILITY.md for the exact semantics of each kind per
 #: backend.
-KINDS = ("arrival", "dispatch", "cold_start", "admit", "bypass", "demote",
-         "preempt", "fail", "requeue", "scale", "complete")
+KINDS = ("arrival", "shed", "retry", "dispatch", "cold_start", "admit",
+         "bypass", "demote", "preempt", "timeout", "fail", "requeue",
+         "recover", "scale", "complete")
 KIND_ORDER = {k: i for i, k in enumerate(KINDS)}
 
 
@@ -128,7 +132,8 @@ class TraceRecorder:
             if server >= 0:
                 servers.add(server)
             if kind in ("admit", "bypass", "demote", "preempt",
-                        "cold_start", "fail", "requeue", "scale"):
+                        "cold_start", "fail", "requeue", "scale",
+                        "shed", "retry", "timeout", "recover"):
                 out.append({"name": kind, "ph": "i", "s": "t",
                             "ts": t * scale, "pid": pid, "tid": server,
                             "args": {"rid": rid}})

@@ -32,11 +32,13 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.core.chaos import FaultTimeline, RetryWatchdog
 from repro.core.dispatch import (DispatchPolicy, HashDispatch, PullDispatch,
                                  ServerView, make_dispatch, route_hinted)
 from repro.core.lifecycle import Autoscaler, WarmSet, lifecycle_horizon
 from repro.core.predict import make_predictor
-from repro.core.spec import LifecycleSpec, ScalingSpec, resolve_dispatch
+from repro.core.spec import (FaultSpec, LifecycleSpec, RetrySpec,
+                             ScalingSpec, resolve_dispatch)
 from repro.serving.engine import Engine
 from repro.serving.request import Request
 
@@ -89,6 +91,11 @@ class ClusterConfig:
     # autoscaling: None, a LifecycleSpec/ScalingSpec, or its string form
     lifecycle: object = None
     scaling: object = None
+    # chaos subsystem (core/chaos.py): correlated failure episodes with
+    # recovery (FaultSpec) and request timeouts/retries/hedging/shedding
+    # (RetrySpec); None, a spec, or its string form
+    faults: object = None
+    retry: object = None
 
     def to_spec(self, servers):
         """Equivalent :class:`~repro.core.spec.ExperimentSpec`;
@@ -103,7 +110,8 @@ class ClusterConfig:
                                       adaptive_window=self.adaptive_window,
                                       slice_init=self.slice_init),
             predictor=self.predictor,
-            lifecycle=self.lifecycle, scaling=self.scaling)
+            lifecycle=self.lifecycle, scaling=self.scaling,
+            faults=self.faults, retry=self.retry)
 
 
 class ClusterFrontend:
@@ -150,6 +158,17 @@ class ClusterFrontend:
         self._scaler = (Autoscaler(self.scaling, self.n_servers,
                                    [v.lanes for v in self.views])
                         if self.scaling is not None else None)
+        # -- chaos (core/chaos.py, docs/CLUSTER.md) ---------------------
+        fa = self.cfg.faults
+        self.faults = FaultSpec.parse(fa) if isinstance(fa, str) else fa
+        rt = self.cfg.retry
+        self.retry = RetrySpec.parse(rt) if isinstance(rt, str) else rt
+        self._timeline = (FaultTimeline(self.faults, self.n_servers)
+                          if self.faults is not None else None)
+        self._watchdog = (RetryWatchdog(self.retry)
+                          if self.retry is not None else None)
+        self._shed: list[Request] = []
+        self.chaos_counts = {"shed": 0, "timeout": 0, "retry": 0}
         # live membership: None = unrestricted (legacy fast paths); a
         # sorted list once autoscaling or a failure constrains routing
         self._active: Optional[list] = None
@@ -200,6 +219,8 @@ class ClusterFrontend:
     # ------------------------------------------------------------------
     def _observe_finish(self, req: Request, t: int):
         """Feedback loop: predictors only ever see finished requests."""
+        if self._watchdog is not None:
+            self._watchdog.complete(req.rid)
         ser = self._series
         if ser is not None:
             c = ser.counters
@@ -231,6 +252,13 @@ class ClusterFrontend:
         self.policy.record(idx)
         eta = self.eta_log.get(req.rid)
         if self._warm is not None:
+            # per-dispatch coldness: a redispatched request whose prior
+            # cold charge was never unwound (any requeue path) is
+            # uncharged first, so repeated hops can never compound
+            # cold_extra — the charge below is idempotent per dispatch
+            stale = self._cold_extra.pop(req.rid, 0)
+            if stale:
+                req.n_tokens -= stale
             # cold start: charge the penalty as extra decode demand the
             # moment the request lands on a server whose container for
             # this function is absent or expired (docs/CLUSTER.md)
@@ -249,6 +277,8 @@ class ClusterFrontend:
             # running in hinted_demotion mode can use it; an explicit
             # front-end hint is never overwritten
             req.eta_hint = eta
+        if self._watchdog is not None:
+            self._watchdog.on_dispatch(req.rid, idx, self.t, eta)
         self._submit(idx, req)
 
     # -- fleet lifecycle ------------------------------------------------
@@ -258,28 +288,60 @@ class ClusterFrontend:
         empty state.  Returns the evicted serving Requests."""
         raise NotImplementedError
 
+    def _evict_request(self, idx: int, rid: int):
+        """Backend hook: remove the single request ``rid`` from server
+        ``idx`` (wherever it sits: slot-pending, queued, in a FILTER
+        lane or the fair pool) and return it, or None if absent."""
+        raise NotImplementedError
+
     def _lifecycle_horizon(self) -> Optional[int]:
         """Next tick a lifecycle decision can fire at, or None.  The
         jax backend clamps its event-driven fast-forward to this so
-        failure/scale decisions are evaluated at exactly the same tick
-        as in the per-tick backends."""
-        if self._fail_at is None and self._scaler is None:
+        failure/scale/fault/timeout decisions are evaluated at exactly
+        the same tick as in the per-tick backends."""
+        if (self._fail_at is None and self._scaler is None
+                and self._timeline is None and self._watchdog is None):
             return None
-        return lifecycle_horizon(self.t, self._fail_at, self._scaler)
+        extras = []
+        if self._timeline is not None:
+            extras.append(self._timeline.next_time())
+        if self._watchdog is not None:
+            extras.append(self._watchdog.next_boundary())
+        return lifecycle_horizon(self.t, self._fail_at, self._scaler,
+                                 extras)
 
     def _lifecycle_tick(self):
-        """Evaluate failure then autoscale at the top of a tick, before
-        any of the tick's arrivals are routed."""
-        if self._fail_at is not None and self.t >= self._fail_at:
+        """Evaluate faults/recoveries, failure, request deadlines and
+        autoscale at the top of a tick, before any of the tick's
+        arrivals are routed."""
+        t = self.t
+        if self._timeline is not None:
+            for _, kind, idx in self._timeline.due(t):
+                if kind == "recover":
+                    self._recover(idx)
+                else:
+                    self._maybe_fail(idx)
+        if self._fail_at is not None and t >= self._fail_at:
+            self._fail_at = None
             self._fail(self._fail_server)
-        if self._scaler is not None and self.t % self._scaler.period == 0:
+        if self._watchdog is not None:
+            self._watchdog_tick(t)
+        if self._scaler is not None and t % self._scaler.period == 0:
             self._autoscale()
+
+    def _maybe_fail(self, idx: int):
+        """A FaultTimeline failure event: skipped when the server is
+        already dead (overlapping episodes) or when killing it would
+        leave the fleet with no live server to route to."""
+        if idx in self._dead or len(self._dead) + 1 >= self.n_servers:
+            return
+        self._fail(idx)
 
     def _fail(self, idx: int):
         """Kill server ``idx``: evict its resident requests, remove it
-        from the routable set forever, and re-enter every evicted
-        request through normal dispatch (requeue events)."""
-        self._fail_at = None
+        from the routable set, and re-enter every evicted request
+        through normal dispatch (requeue events).  The server stays
+        dead until a scheduled recovery (if any) revives it."""
         self._dead.add(idx)
         if self._warm is not None:
             self._warm.fail(idx)
@@ -292,16 +354,92 @@ class ClusterFrontend:
                             if i not in self._dead]
         else:
             self._active = [i for i in self._active if i != idx]
+            if not self._active:
+                # the last routable server died while live spares sit
+                # drained: emergency-activate the lowest-index one so
+                # the evicted work (and future arrivals) can route
+                spare = min(i for i in range(self.n_servers)
+                            if i not in self._dead)
+                self._active = [spare]
+                if tr is not None:
+                    tr.emit(self.t, "scale", -1, spare, 1)
         self.policy.set_active(self._active)
+        wd = self._watchdog
         for req in sorted(evicted, key=lambda r: r.rid):
+            if wd is not None:
+                wd.disarm(req.rid)
             req.requeue_reset(self._cold_extra.pop(req.rid, 0))
             if tr is not None:
                 tr.emit(self.t, "requeue", req.rid, idx)
-            ridx = self.route(req)
-            if ridx is None:
-                self.central_queue.append(req)
+            self._redispatch(req)
+
+    def _recover(self, idx: int):
+        """A FaultTimeline repair completed: the server re-enters the
+        fleet empty and cold (its warm set was dropped at failure).
+        Without an autoscaler it rejoins the routable set immediately;
+        with one it comes back drained — the next scale-up may re-admit
+        it now that it is no longer dead."""
+        if idx not in self._dead:
+            return                       # never died (failure skipped)
+        self._dead.discard(idx)
+        if self._trace is not None:
+            self._trace.emit(self.t, "recover", -1, idx)
+        if self._scaler is None and self._active is not None:
+            self._active = sorted(set(self._active) | {idx})
+            self.policy.set_active(self._active)
+
+    def _watchdog_tick(self, t):
+        """Drain expired deadlines (timeouts + hedges) then released
+        backoff holds, in deterministic (time, rid) order."""
+        wd = self._watchdog
+        tr = self._trace
+        for rid, idx, kind in wd.expired(t):
+            req = self._evict_request(idx, rid)
+            if req is None:              # defensive: state drifted
+                continue
+            req.requeue_reset(self._cold_extra.pop(rid, 0))
+            if kind == "hedge":
+                # straggler relocation: cancel-and-redispatch once,
+                # without burning retry budget
+                wd.mark_hedged(rid)
+                self.chaos_counts["retry"] += 1
+                if tr is not None:
+                    tr.emit(t, "retry", rid, idx, 1)
+                self._redispatch(req)
+                continue
+            self.chaos_counts["timeout"] += 1
+            if tr is not None:
+                tr.emit(t, "timeout", rid, idx)
+            attempt = wd.record_timeout(rid)
+            if wd.exhausted(rid):
+                # retry budget spent: shed instead of retrying
+                wd.forget(rid)
+                self.chaos_counts["shed"] += 1
+                self._shed.append(req)
+                if tr is not None:
+                    tr.emit(t, "shed", rid, idx)
+                continue
+            release = wd.backoff_until(t, attempt)
+            if release <= t:
+                self.chaos_counts["retry"] += 1
+                if tr is not None:
+                    tr.emit(t, "retry", rid, idx)
+                self._redispatch(req)
             else:
-                self._deliver(ridx, req)
+                wd.hold(rid, req, release)
+        for rid, req in wd.released(t):
+            self.chaos_counts["retry"] += 1
+            if tr is not None:
+                tr.emit(t, "retry", rid, -1)
+            self._redispatch(req)
+
+    def _redispatch(self, req: Request):
+        """Re-enter a requeued/retried request through normal dispatch."""
+        idx = self.route(req)
+        if idx is None:
+            self.central_queue.append(req)
+        else:
+            self._deliver(idx, req)
 
     def _autoscale(self):
         load = sum(v.outstanding() for v in self.views) \
@@ -321,15 +459,43 @@ class ClusterFrontend:
         self._active = sorted(active)
         self.policy.set_active(self._active)
 
+    def _shed_filter(self, arrivals):
+        """Admission control: drop fresh arrivals while outstanding
+        work per active lane sits at/above the ``shed`` watermark —
+        kept requests count toward the load their successors see."""
+        mark = self._watchdog.shed
+        views = (self.views if self._active is None
+                 else [self.views[i] for i in self._active])
+        load = sum(v.outstanding() for v in views) \
+            + len(self.central_queue) + self._watchdog.pending()
+        lanes = sum(v.lanes for v in views) or 1
+        kept = []
+        tr, t = self._trace, self.t
+        for r in arrivals:
+            if load >= mark * lanes:
+                self.chaos_counts["shed"] += 1
+                self._shed.append(r)
+                if tr is not None:
+                    tr.emit(t, "shed", r.rid)
+            else:
+                kept.append(r)
+                load += 1
+        return kept
+
     def tick(self, arrivals: Sequence[Request] = ()):
         """Dispatch this tick's arrivals, drain pulls, tick every engine."""
-        if self._fail_at is not None or self._scaler is not None:
+        if (self._fail_at is not None or self._scaler is not None
+                or self._timeline is not None
+                or self._watchdog is not None):
             self._lifecycle_tick()
         tr, prof = self._trace, self._prof
         if tr is not None and arrivals:
             t = self.t
             for r in arrivals:
                 tr.emit(t, "arrival", r.rid)
+        if (arrivals and self._watchdog is not None
+                and self._watchdog.shed is not None):
+            arrivals = self._shed_filter(arrivals)
         t0 = perf_counter() if prof is not None else 0.0
         if isinstance(self.policy, HashDispatch):
             # legacy Router semantics: route the whole tick's batch
@@ -374,7 +540,9 @@ class ClusterFrontend:
         """Drive the cluster over a workload; returns requests rid-sorted."""
         workload = sorted(workload, key=lambda r: r.arrival)
         i, n = 0, len(workload)
-        while self._finished_count() < n:
+        # shed requests never finish; they terminate the loop as their
+        # own accounting, excluded from every completion metric
+        while self._finished_count() + len(self._shed) < n:
             if self.t > max_ticks:
                 raise RuntimeError(
                     f"cluster exceeded {max_ticks} ticks "
@@ -404,6 +572,29 @@ class ClusterFrontend:
                                          0),
             "ticks": self.t,
         }
+
+
+def _evict_one(engine: Engine, rid: int):
+    """Remove the single request ``rid`` from a per-object engine —
+    slot-pending, or resident in a slot and in whatever scheduler
+    structure holds it — and return it (None if absent).  Shared by
+    ``Cluster`` and the vector backend's object-engine stragglers."""
+    for i, r in enumerate(engine.pending_slot):
+        if r.rid == rid:
+            engine.pending_slot.pop(i)
+            return r
+    for slot, r in engine.by_slot.items():
+        if r.rid == rid:
+            del engine.by_slot[slot]
+            engine.free_slots.append(slot)
+            engine.next_token.pop(rid, None)
+            r.slot = None
+            if r.stall_until >= 0:
+                r.stall_until = -1
+                engine.n_stalled -= 1
+            engine.scheduler.discard(rid)
+            return r
+    return None
 
 
 def _evict_engine(engine: Engine, trace, idx: int) -> list:
@@ -445,6 +636,9 @@ class Cluster(ClusterFrontend):
 
     def _evict_server(self, idx: int) -> list:
         return _evict_engine(self.engines[idx], self._trace, idx)
+
+    def _evict_request(self, idx: int, rid: int):
+        return _evict_one(self.engines[idx], rid)
 
     def _step(self):
         for e in self.engines:

@@ -762,6 +762,86 @@ class _JaxGroup:
         self.min_next = 1
         return evicted
 
+    def evict_one(self, j: int, rid: int):
+        """Remove the single resident request ``rid`` from engine ``j``
+        (unflushed arrival batch, pending deque, queue ring, FILTER
+        lane or fair-share pool) and return its Request — the jax half
+        of the frontend's ``_evict_request`` hook (timeout/hedge).
+        Pull/patch/push like :meth:`evict`; shapes are unchanged, so no
+        re-jit, and the stale event-skip distance is discarded."""
+        import jax.numpy as jnp
+        st = self.store
+        if self._batch:
+            # classified this tick but not yet scattered: undo the
+            # mirror increment _classify made for its target region
+            b = np.array(self._batch, np.int64).reshape(-1, 5)
+            hit = np.nonzero((b[:, 0] == j) & (b[:, 3] == rid))[0]
+            if hit.size:
+                k = int(hit[0])
+                row, kind = int(b[k, 2]), int(b[k, 1])
+                if kind == 0:
+                    self.qlen[j] -= 1
+                else:
+                    self.cfs_count[j] -= 1
+                self._batch = np.delete(b, k, axis=0).reshape(-1).tolist()
+                self.free_slots[j] += 1
+                self.outstanding[j] -= 1
+                self.min_next = 1
+                return st.reqs[row]
+        for k, (row, req) in enumerate(self.pending[j]):
+            if req.rid == rid:
+                del self.pending[j][k]
+                self.pending_len[j] -= 1
+                self.outstanding[j] -= 1     # never claimed a slot
+                return req
+        host = {k: np.asarray(v).copy() for k, v in self._state.items()}
+        row = None
+        qn = int(host["qn"][j])
+        if qn:
+            idx = (int(host["qh"][j]) + np.arange(qn)) % self.QCAP
+            ring = host["q"][j, idx]
+            hit = np.nonzero(ring[:, _QRID] == rid)[0]
+            if hit.size:
+                p = int(hit[0])
+                row = int(ring[p, _QROW])
+                q2 = np.zeros_like(host["q"][j])
+                q2[:qn - 1] = np.delete(ring, p, axis=0)
+                host["q"][j] = q2            # unrolled to head 0
+                host["qh"][j] = 0
+                host["qn"][j] = qn - 1
+                self.qh[j] = 0
+                self.qlen[j] -= 1
+        lc = int(host["lc"][j])
+        if row is None and lc:
+            hit = np.nonzero(host["lanes"][j, :lc, _LRID] == rid)[0]
+            if hit.size:
+                p = int(hit[0])
+                row = int(host["lanes"][j, p, _LROW])
+                # stable shift-left, like the end-of-tick compaction
+                host["lanes"][j, p:lc - 1] = host["lanes"][j, p + 1:lc]
+                host["lanes"][j, lc - 1] = 0
+                host["lc"][j] = lc - 1
+                self.filter_count[j] -= 1
+        pc = int(host["pc"][j])
+        if row is None and pc:
+            hit = np.nonzero(host["pool"][j, :pc, _PRID] == rid)[0]
+            if hit.size:
+                p = int(hit[0])
+                row = int(host["pool"][j, p, _PROW])
+                host["pool"][j, p:pc - 1] = host["pool"][j, p + 1:pc]
+                host["pool"][j, pc - 1] = 0
+                host["pc"][j] = pc - 1
+                self.cfs_count[j] -= 1
+        if row is None:
+            return None
+        lr = host["last"][j]
+        lr[lr == row] = -1                   # no phantom displacement
+        self._state = {k: jnp.asarray(v) for k, v in host.items()}
+        self.free_slots[j] += 1
+        self.outstanding[j] -= 1
+        self.min_next = 1
+        return st.reqs[row]
+
     # -- multi-tick fast paths -----------------------------------------
     def skip_valid(self) -> bool:
         """No event before ``min_next`` ticks can change behaviour:
@@ -970,10 +1050,19 @@ class JaxCluster(ClusterFrontend):
         self._cols.mark(idx)
         return evicted
 
+    def _evict_request(self, idx: int, rid: int):
+        group, j = self._backend[idx]
+        req = group.evict_one(j, rid)
+        if req is not None:
+            self._cols.mark(idx)
+        return req
+
     def _observe_finish(self, req: Request, t: int):
         # series completion counters are handled in _replay from the
         # store columns — ``req`` is only written back at collect time,
         # so its demoted/n_ctx fields are stale here
+        if self._watchdog is not None:
+            self._watchdog.complete(req.rid)
         self.predictor.observe(req.func_id, req.service_demand)
 
     def _replay(self, events: list, t: int):
@@ -1105,7 +1194,9 @@ class JaxCluster(ClusterFrontend):
             prompts: Optional[dict] = None) -> list[Request]:
         workload = sorted(workload, key=lambda r: r.arrival)
         i, n = 0, len(workload)
-        while self._finished_count() < n:
+        # shed requests never finish; they terminate the loop as their
+        # own accounting, excluded from every completion metric
+        while self._finished_count() + len(self._shed) < n:
             if self.t > max_ticks:
                 raise RuntimeError(
                     f"cluster exceeded {max_ticks} ticks "

@@ -85,6 +85,12 @@ class Scheduler:
     def on_wake(self, rid: int, t: int):
         pass
 
+    def discard(self, rid: int):
+        """Forget ``rid`` entirely — the chaos eviction seam (timeout /
+        hedge relocation, core/chaos.py).  Must leave no phantom
+        preempt behind on the next ``select``."""
+        raise NotImplementedError
+
     # -- shared helpers ------------------------------------------------------
     def _charge(self, rid: int):
         self.reqs[rid].served_ticks += 1
@@ -151,6 +157,13 @@ class FIFOScheduler(Scheduler):
         self.reqs[rid].queue_enter = t
         self.queue.append(rid)
 
+    def discard(self, rid: int):
+        if rid in self.queue:
+            self.queue.remove(rid)
+        if rid in self.running:
+            self.running.remove(rid)
+        self.reqs.pop(rid, None)
+
     def active_count(self) -> int:
         return len(self.running)
 
@@ -213,6 +226,12 @@ class CFSScheduler(Scheduler):
         r.vruntime = max(r.vruntime, self.min_vruntime)
         self.runnable.add(rid)
 
+    def discard(self, rid: int):
+        self.runnable.discard(rid)
+        if rid in self._last:
+            self._last = [x for x in self._last if x != rid]
+        self.reqs.pop(rid, None)
+
     def active_count(self) -> int:
         return min(self.lanes, len(self.runnable))
 
@@ -270,6 +289,12 @@ class SRTFScheduler(Scheduler):
 
     def on_wake(self, rid: int, t: int):
         self.runnable.add(rid)
+
+    def discard(self, rid: int):
+        self.runnable.discard(rid)
+        if rid in self._last:
+            self._last = [x for x in self._last if x != rid]
+        self.reqs.pop(rid, None)
 
     def active_count(self) -> int:
         return min(self.lanes, len(self.runnable))
@@ -414,6 +439,13 @@ class SFSScheduler(Scheduler):
         else:
             r.queue_enter = t
             self.queue.append(rid)
+
+    def discard(self, rid: int):
+        if rid in self.queue:
+            self.queue.remove(rid)
+        if rid in self.filter_running:
+            self.filter_running.remove(rid)
+        self.cfs.discard(rid)             # shared reqs dict: one pop
 
     def active_count(self) -> int:
         return len(self.filter_running)

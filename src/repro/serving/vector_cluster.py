@@ -323,6 +323,52 @@ class _VectorGroup:
         self.n_active[j] = 0
         return [st.reqs[r] for r in rows]
 
+    def evict_one(self, j: int, rid: int):
+        """Chaos eviction (timeout/hedge, docs/CLUSTER.md): remove the
+        single resident request ``rid`` from engine ``j`` and return
+        its Request, or None when not resident.  The store row is
+        orphaned exactly like :meth:`evict`; a slot is freed only when
+        the request held one (slot-pending requests never claimed
+        theirs)."""
+        st = self.store
+        for row in self.pending[j]:
+            if st.rid[row] == rid:
+                self.pending[j].remove(row)
+                self.pending_len[j] -= 1
+                self.outstanding[j] -= 1
+                return st.reqs[int(row)]
+        for row in self.queue[j]:
+            if st.rid[row] == rid:
+                self.queue[j].remove(row)
+                self.qlen[j] -= 1
+                self.free_slots[j] += 1
+                self.outstanding[j] -= 1
+                return st.reqs[int(row)]
+        fc = int(self.filter_count[j])
+        for p in range(fc):
+            row = int(self.filter_rids[j, p])
+            if st.rid[row] == rid:
+                st.in_filter[row] = False
+                # stable shift-left: surviving lanes keep their order,
+                # same as the end-of-tick lane compaction
+                self.filter_rids[j, p:fc - 1] = self.filter_rids[j,
+                                                                 p + 1:fc]
+                self.filter_rids[j, fc - 1] = -1
+                self.filter_count[j] = fc - 1
+                self.free_slots[j] += 1
+                self.outstanding[j] -= 1
+                return st.reqs[row]
+        for p in range(int(self.cfs_count[j])):
+            row = int(self.cfs_rows[j, p])
+            if st.rid[row] == rid:
+                self._cfs_remove(j, row)
+                lr = self.last_rows[j]
+                lr[lr == row] = -1      # no phantom displacement charge
+                self.free_slots[j] += 1
+                self.outstanding[j] -= 1
+                return st.reqs[row]
+        return None
+
     def _admit_pending(self, t: int):
         for j in np.nonzero((self.pending_len > 0) & (self.free_slots > 0)
                             )[0]:
@@ -678,6 +724,18 @@ class VectorCluster(ClusterFrontend):
             evicted = group.evict(j)
         self._cols.mark(idx)
         return evicted
+
+    def _evict_request(self, idx: int, rid: int):
+        b = self._backend[idx]
+        if b is None:
+            from repro.serving.cluster import _evict_one
+            req = _evict_one(self.stragglers[idx], rid)
+        else:
+            group, j = b
+            req = group.evict_one(j, rid)
+        if req is not None:
+            self._cols.mark(idx)
+        return req
 
     def _step(self):
         prof = self._prof

@@ -1,0 +1,25 @@
+"""Fixture backend that grew every chaos kind EXCEPT 'recover' — the
+easy one to forget: it only fires when a repair completes, so a
+backend can pass every fault test that never lets a server heal."""
+
+
+class ChaosBadBackend:
+    def __init__(self, trace=None):
+        self.trace = trace
+
+    def step(self, t, rid):
+        if self.trace is not None:
+            self.trace.emit(t, "arrival", rid)
+
+    def watchdog(self, t, rid, idx):
+        tr = self.trace
+        if tr is None:
+            return
+        tr.emit(t, "timeout", rid, idx)
+        tr.emit(t, "retry", rid, idx)
+        tr.emit(t, "shed", rid, idx)
+
+    def finish(self, t, rows):
+        if self.trace is not None:
+            self.trace.emit_rows(t, "complete", rows)
+# whole backend: no 'recover' emission anywhere   # expect: TEL-KINDS

@@ -1,0 +1,32 @@
+"""Fixture backend covering the grown KINDS, fully guarded — both
+collection modes: direct emit() literals and a key-table container."""
+
+# key table drives emit_rows the way the jax backend does
+ROW_KINDS = [("shed", "trace_shed"), ("retry", "trace_rty")]
+
+
+class ChaosGoodBackend:
+    def __init__(self, trace=None):
+        self.trace = trace
+
+    def step(self, t, rid):
+        if self.trace is not None:
+            self.trace.emit(t, "arrival", rid)
+
+    def watchdog(self, t, rid, idx):
+        tr = self.trace
+        if tr is None:
+            return
+        tr.emit(t, "timeout", rid, idx)
+
+    def lifecycle(self, t, idx, rows):
+        tr = self.trace
+        if tr is None:
+            return
+        tr.emit(t, "recover", -1, idx)
+        for kind, key in ROW_KINDS:
+            tr.emit_rows(t, kind, rows)
+
+    def finish(self, t, rows):
+        if self.trace is not None:
+            self.trace.emit_rows(t, "complete", rows)

@@ -1,0 +1,3 @@
+"""Miniature GROWN telemetry contract for the chaos fixture pair:
+the PR-10 kinds (shed/retry/timeout/recover) next to the originals."""
+KINDS = ("arrival", "shed", "retry", "timeout", "recover", "complete")

@@ -183,12 +183,12 @@ def test_jax_backend_bit_exact_on_cfs_group():
 
 
 def _run_traced(engine, servers, dispatch, predictor, wl,
-                lifecycle=None, scaling=None):
+                lifecycle=None, scaling=None, faults=None, retry=None):
     tel = Telemetry(trace=True)
     res = run_experiment(ExperimentSpec(
         engine=engine, servers=servers, dispatch=dispatch,
         predictor=predictor, workload=wl, lifecycle=lifecycle,
-        scaling=scaling),
+        scaling=scaling, faults=faults, retry=retry),
         max_ticks=2_000_000, telemetry=tel)
     return res, tel.trace
 
@@ -299,6 +299,41 @@ def test_trace_agreement_failure_drain_and_scaling():
     assert len(fp) == 1
     assert counts["fail"] == 1 and counts["requeue"] > 0
     assert counts["scale"] > 0 and counts["cold_start"] > 0
+
+
+def test_trace_agreement_under_chaos_schedule():
+    """The full chaos stack — correlated fault episodes with recovery,
+    per-dispatch timeouts with backoff retries, and admission shedding
+    — still equal-trace across tick/vector/jax (docs/CLUSTER.md "Chaos
+    and graceful degradation").  This is the acceptance gate for the
+    chaos subsystem: the jax gap/scan fast paths must stop at every
+    fault, recovery, deadline, and backoff-release boundary."""
+    servers = tuple(ServerSpec(cores=2) for _ in range(4))
+    wl = "bimodal:n=250,seed=5,load=1.2|zipf:funcs=8,s=1.2"
+    canon, fp, counts, res0 = {}, set(), None, None
+    for engine in ("tick", "vector", "jax"):
+        res, tr = _run_traced(
+            engine, servers, "sfs-aware", "history", wl,
+            lifecycle="lifecycle:cold=3,ttl=60,cap=4",
+            faults="faults:mttf=150,mttr=60,blast=2,episodes=2,seed=9",
+            retry="retry:timeout=120,retries=2,backoff=8,shed=10")
+        canon[engine] = tr.canonical()
+        fp.add(res.fingerprint())
+        counts = counts or tr.counts()
+        res0 = res0 or res
+    assert canon["tick"] == canon["vector"]
+    assert canon["tick"] == canon["jax"]
+    assert len(fp) == 1
+    # every chaos kind is actually exercised by this schedule
+    assert counts["fail"] > 0 and counts["recover"] > 0
+    assert counts["timeout"] > 0 and counts["retry"] > 0
+    assert counts["shed"] > 0
+    # conservation: every arrival either completes or sheds, and shed
+    # requests are excluded from the completion arrays
+    assert res0.n + res0.shed == 250
+    assert counts["complete"] == res0.n
+    assert res0.timeouts == counts["timeout"]
+    assert res0.retries == counts["retry"]
 
 
 def test_des_cluster_cold_start_parity_at_n1():

@@ -115,6 +115,30 @@ def test_telemetry_missing_kind_and_guard():
         m for m in guard_marker if m[0] == "TEL-GUARD"}
 
 
+def _chaos_tel_pass():
+    return TelemetryParityPass(
+        kinds_file="tel/chaos_kinds.py",
+        backends={"good": ("tel/chaos_good_backend.py",),
+                  "bad": ("tel/chaos_bad_backend.py",)},
+        tests_dir=FIX / "tel" / "tests")
+
+
+def test_telemetry_grown_kinds_fixture_pair():
+    """TEL-KINDS enforces the chaos kinds the moment KINDS grows: a
+    backend that added shed/retry/timeout but forgot 'recover' (fires
+    only when a repair completes) fails once, naming exactly the
+    missing kind; the full-coverage twin — emit literals plus a
+    jax-style key table — is clean."""
+    findings, _ = run_analysis([FIX / "tel"], [_chaos_tel_pass()])
+    kinds = [f for f in findings if f.rule == "TEL-KINDS"]
+    assert len(kinds) == 1
+    assert "bad" in kinds[0].message
+    assert "recover" in kinds[0].message
+    assert not any(k in kinds[0].message
+                   for k in ("shed", "retry", "timeout"))
+    assert not [f for f in findings if f.rule == "TEL-GUARD"]
+
+
 def test_telemetry_registry_orphan():
     findings, _ = run_analysis([FIX / "tel"], [_tel_pass()])
     orphans = [f for f in findings if f.rule == "TEL-REGISTRY"]

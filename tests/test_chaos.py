@@ -1,0 +1,398 @@
+"""Chaos subsystem (docs/CLUSTER.md "Chaos and graceful degradation"):
+FaultSpec/RetrySpec grammar round-trips, the FaultTimeline and
+RetryWatchdog state machines, per-dispatch cold-penalty charging under
+repeated evictions (the stacking regression), autoscaler boundary
+cases with dead servers, and behavioral end-to-end checks.  Cross-
+engine trace equality under chaos lives in tests/test_agreement.py."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chaos import FaultTimeline, RetryWatchdog
+from repro.core.lifecycle import Autoscaler, lifecycle_horizon
+from repro.core.spec import (ExperimentSpec, FaultSpec, RetrySpec,
+                             ScalingSpec, ServerSpec, run_experiment)
+from repro.core.telemetry import Telemetry
+from repro.core.workload import FaaSBenchConfig, generate
+
+# ---------------------------------------------------------------------------
+# Spec grammar: parse(str(spec)) == spec, property-based
+# ---------------------------------------------------------------------------
+
+_fault_specs = st.builds(
+    lambda mttf, mttr, blast, episodes, seed: FaultSpec(
+        "faults", (("mttf", mttf), ("mttr", mttr), ("blast", blast),
+                   ("episodes", episodes), ("seed", seed))),
+    mttf=st.integers(1, 500), mttr=st.integers(1, 200),
+    blast=st.integers(1, 8), episodes=st.integers(1, 6),
+    seed=st.integers(0, 50))
+
+_retry_specs = st.builds(
+    lambda timeout, retries, backoff, factor, shed: RetrySpec(
+        "retry", (("timeout", timeout), ("retries", retries),
+                  ("backoff", backoff), ("factor", factor),
+                  ("shed", shed))),
+    timeout=st.integers(1, 500), retries=st.integers(0, 5),
+    backoff=st.integers(0, 50), factor=st.floats(0.5, 4.0),
+    shed=st.integers(1, 40))
+
+
+@settings(max_examples=60, deadline=None)
+@given(spec=st.one_of(_fault_specs, _retry_specs))
+def test_chaos_spec_round_trip(spec):
+    assert type(spec).parse(str(spec)) == spec
+
+
+def test_chaos_spec_aliases_and_validation():
+    assert RetrySpec.parse("retry:timeout=10,budget=3") == \
+        RetrySpec("retry", (("timeout", 10), ("retries", 3)))
+    with pytest.raises(ValueError, match="mttf"):
+        FaultSpec.parse("faults:mttr=10")
+    with pytest.raises(ValueError, match="unknown faults knob"):
+        FaultSpec.parse("faults:mttf=10,blastt=2")
+    with pytest.raises(ValueError, match="at least one of"):
+        RetrySpec.parse("retry:retries=3")
+    with pytest.raises(ValueError, match="timeout"):
+        RetrySpec.parse("retry:timeout=0")
+    # blast radius cannot exceed the fleet
+    with pytest.raises(ValueError, match="blast"):
+        ExperimentSpec(engine="vector",
+                       servers=(ServerSpec(cores=2),) * 2,
+                       faults="faults:mttf=50,blast=3")
+
+
+def test_experiment_spec_json_round_trip_with_chaos():
+    import json
+    spec = ExperimentSpec(
+        engine="vector", servers=(ServerSpec(cores=2),) * 4,
+        dispatch="sfs-aware", predictor="history",
+        workload="bimodal:n=100,seed=3|zipf:funcs=8",
+        lifecycle="lifecycle:cold=3,ttl=40",
+        faults="faults:mttf=150,mttr=60,blast=2,episodes=2,seed=9",
+        retry="retry:timeout=120,retries=2,backoff=8,shed=10")
+    back = ExperimentSpec.from_json(json.loads(json.dumps(spec.to_json())))
+    assert back == spec
+    assert isinstance(back.faults, FaultSpec)
+    assert isinstance(back.retry, RetrySpec)
+
+
+# ---------------------------------------------------------------------------
+# FaultTimeline
+# ---------------------------------------------------------------------------
+
+
+def test_fault_timeline_is_deterministic_and_ordered():
+    spec = FaultSpec.parse("faults:mttf=50,mttr=20,blast=2,episodes=3,"
+                           "seed=7")
+    a = FaultTimeline(spec, 4)
+    b = FaultTimeline(spec, 4)
+    assert a.events == b.events
+    # 3 episodes x blast 2, each with a matching recover
+    assert sum(1 for e in a.events if e[1] == "fail") == 6
+    assert sum(1 for e in a.events if e[1] == "recover") == 6
+    times = [e[0] for e in a.events]
+    assert times == sorted(times)
+    # a different seed reshuffles the schedule
+    c = FaultTimeline(FaultSpec.parse(
+        "faults:mttf=50,mttr=20,blast=2,episodes=3,seed=8"), 4)
+    assert c.events != a.events
+
+
+def test_fault_timeline_blast_groups_and_first():
+    spec = FaultSpec.parse("faults:mttf=100,blast=2,episodes=3,first=10")
+    tl = FaultTimeline(spec, 4)
+    fails = [e for e in tl.events if e[1] == "fail"]
+    # mttr omitted: failures are permanent
+    assert not [e for e in tl.events if e[1] == "recover"]
+    assert fails[0][0] == 10                       # first pins episode 0
+    # consecutive groups rotate: {0,1}, {2,3}, {0,1} (mod 4)
+    by_ep = [sorted(s for t, _, s in fails[i:i + 2])
+             for i in range(0, 6, 2)]
+    assert by_ep == [[0, 1], [2, 3], [0, 1]]
+
+
+def test_fault_timeline_integral_keeps_recover_after_fail():
+    # tiny mttr would round repair onto the failure tick; the integral
+    # domain pushes it to fail + 1 so the dead window is never empty
+    spec = FaultSpec.parse("faults:mttf=5,mttr=1,episodes=4,seed=1")
+    tl = FaultTimeline(spec, 2)
+    ev = {}
+    for t, kind, s in tl.events:
+        ev.setdefault(kind, []).append(t)
+    assert all(isinstance(t, int) for t in ev["fail"] + ev["recover"])
+    assert all(r > f for f, r in zip(ev["fail"], ev["recover"]))
+    # the DES domain keeps raw float times instead
+    tf = FaultTimeline(spec, 2, integral=False)
+    assert any(not float(t).is_integer() for t, _, _ in tf.events)
+
+
+def test_fault_timeline_due_and_next_time():
+    spec = FaultSpec.parse("faults:mttf=40,mttr=15,episodes=2,first=10,"
+                           "seed=3")
+    tl = FaultTimeline(spec, 3)
+    t0 = tl.next_time()
+    assert t0 == 10
+    assert tl.due(9) == []
+    first = tl.due(t0)
+    assert first and all(t <= t0 for t, _, _ in first)
+    assert tl.next_time() > t0                     # pointer advanced
+    rest = tl.due(float("inf"))
+    assert tl.next_time() is None and tl.due(1e18) == []
+    assert len(first) + len(rest) == len(tl.events)
+
+
+# ---------------------------------------------------------------------------
+# RetryWatchdog
+# ---------------------------------------------------------------------------
+
+
+def _wd(s="retry:timeout=10,retries=2,backoff=4,factor=2", **kw):
+    return RetryWatchdog(RetrySpec.parse(s), **kw)
+
+
+def test_watchdog_arms_expires_and_completes():
+    wd = _wd()
+    wd.on_dispatch(1, 0, t=0, eta=None)
+    wd.on_dispatch(2, 1, t=0, eta=None)
+    wd.complete(2)                                 # finished in time
+    assert wd.expired(9) == []
+    assert wd.next_boundary() == 10
+    assert wd.expired(10) == [(1, 0, "timeout")]
+    assert wd.expired(10) == []                    # drained exactly once
+    assert wd.next_boundary() is None
+
+
+def test_watchdog_rearm_invalidates_stale_deadline():
+    wd = _wd()
+    wd.on_dispatch(1, 0, t=0, eta=None)
+    wd.disarm(1)                                   # e.g. failure requeue
+    wd.on_dispatch(1, 2, t=5, eta=None)            # re-dispatched later
+    assert wd.expired(10) == []                    # old deadline is stale
+    assert wd.expired(15) == [(1, 2, "timeout")]
+
+
+def test_watchdog_budget_and_backoff_schedule():
+    wd = _wd("retry:timeout=10,retries=2,backoff=4,factor=2")
+    assert wd.record_timeout(1) == 1
+    assert not wd.exhausted(1)
+    assert wd.backoff_until(100, 1) == 104          # 4 * 2^0
+    assert wd.backoff_until(100, 2) == 108          # 4 * 2^1
+    assert wd.record_timeout(1) == 2
+    assert not wd.exhausted(1)                      # retries=2 allows 2
+    wd.record_timeout(1)
+    assert wd.exhausted(1)                          # third expiry sheds
+    # zero backoff releases immediately; integral grain ceils to >= 1
+    assert _wd("retry:timeout=10,backoff=0").backoff_until(7, 3) == 7
+    assert _wd("retry:timeout=10,backoff=0.2").backoff_until(7, 1) == 8
+    f = _wd("retry:timeout=10,backoff=0.2", integral=False)
+    assert f.backoff_until(7, 1) == pytest.approx(7.2)
+
+
+def test_watchdog_holds_release_in_time_rid_order():
+    wd = _wd()
+    wd.hold(5, "req5", release=20)
+    wd.hold(3, "req3", release=20)
+    wd.hold(9, "req9", release=12)
+    assert wd.pending() == 3
+    assert wd.next_boundary() == 12
+    assert wd.released(11) == []
+    assert wd.released(20) == [(9, "req9"), (3, "req3"), (5, "req5")]
+    assert wd.pending() == 0
+
+
+def test_watchdog_hedge_undercuts_timeout_once():
+    wd = _wd("retry:timeout=100,hedge=3")
+    wd.on_dispatch(1, 0, t=0, eta=4)               # hedge at 12 < 100
+    assert wd.next_boundary() == 12
+    assert wd.expired(12) == [(1, 0, "hedge")]
+    wd.mark_hedged(1)
+    wd.on_dispatch(1, 2, t=12, eta=4)              # relocated once only
+    assert wd.next_boundary() == 112               # hard timeout now
+    assert wd.expired(112) == [(1, 2, "timeout")]
+    # an abstaining predictor (eta None) never hedges
+    wd2 = _wd("retry:timeout=100,hedge=3")
+    wd2.on_dispatch(7, 0, t=0, eta=None)
+    assert wd2.next_boundary() == 100
+
+
+def test_watchdog_forget_drops_all_state():
+    wd = _wd()
+    wd.on_dispatch(1, 0, t=0, eta=None)
+    wd.record_timeout(1)
+    wd.hold(1, "req1", release=30)
+    wd.forget(1)
+    assert wd.pending() == 0
+    assert wd.expired(1e9) == []
+    assert not wd.exhausted(1)                      # attempts cleared
+
+
+def test_lifecycle_horizon_extras_clamp_and_merge():
+    assert lifecycle_horizon(5, None, None, extras=[None]) is None
+    assert lifecycle_horizon(5, None, None, extras=[9, None, 7]) == 7
+    assert lifecycle_horizon(12, None, None, extras=[9]) == 12  # overdue
+    sc = Autoscaler(ScalingSpec.parse("scale:T=10"), 4, [1] * 4)
+    assert lifecycle_horizon(11, None, sc, extras=[14]) == 14
+    assert lifecycle_horizon(11, None, sc, extras=[25]) == 20
+
+
+# ---------------------------------------------------------------------------
+# Satellite: autoscaler boundaries with dead servers
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_pinned_at_min_equals_live_fleet():
+    sc = ScalingSpec.parse("scale:min=2,max=4,T=10,up=0.75,down=0.25")
+    a = Autoscaler(sc, 4, [4, 4, 4, 4])
+    # min == n - dead: nothing to drain (floored) and nothing to grow
+    # (every inactive server is dead) — at either utilization extreme
+    assert a.decide(0, [0, 1], {2, 3}) == []
+    assert a.decide(99, [0, 1], {2, 3}) == []
+    # a failure below min: scale-up offers only live spares
+    assert a.decide(99, [0], {1, 2}) == [(3, +1)]
+    # whole fleet dead except the actives: decide stays a no-op even
+    # with zero capacity (util inf)
+    assert a.decide(5, [], {0, 1, 2, 3}) == []
+
+
+def test_draining_server_failing_same_boundary_conserves_requests():
+    """A scale-down drain target that is ALSO hit by a fault episode at
+    the same boundary must not strand work: its outstanding requests
+    requeue, and every request still completes or sheds."""
+    spec = ExperimentSpec(
+        engine="vector", servers=tuple(ServerSpec(cores=2)
+                                       for _ in range(4)),
+        dispatch="sfs-aware", predictor="history",
+        workload="bimodal:n=300,seed=5,load=1.3|flash:at=100,x=4,dur=150",
+        lifecycle="lifecycle:cold=3,ttl=60,cap=4",
+        scaling="scale:min=1,T=20,up=0.5,down=0.3,step=2",
+        faults="faults:mttf=80,mttr=40,blast=2,episodes=3,seed=2",
+        retry="retry:timeout=150,retries=2,backoff=8,shed=12")
+    tel = Telemetry(trace=True)
+    res = run_experiment(spec, max_ticks=2_000_000, telemetry=tel)
+    counts = tel.trace.counts()
+    assert res.n + res.shed == 300                 # nothing stranded
+    assert counts["fail"] > 0 and counts["scale"] > 0
+    assert counts["complete"] == res.n
+    # no dispatch lands strictly inside a server's dead window (events
+    # on the failure tick itself may interleave: a sibling failure's
+    # requeued work can route to a server that dies later in the same
+    # lifecycle pass, which then re-evicts it)
+    down = {}                                      # server -> fail time
+    windows = []                                   # (server, t0, t1]
+    for t, kind, rid, server, aux in tel.trace.canonical():
+        if kind == "fail" and rid == -1:
+            down[server] = t
+        elif kind == "recover":
+            windows.append((server, down.pop(server), t))
+    windows += [(s, t0, float("inf")) for s, t0 in down.items()]
+    for t, kind, rid, server, aux in tel.trace.canonical():
+        if kind == "dispatch":
+            assert not any(s == server and t0 < t < t1
+                           for s, t0, t1 in windows), (t, rid, server)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-dispatch cold charging never stacks across evictions
+# ---------------------------------------------------------------------------
+
+
+def test_cold_penalty_does_not_stack_across_repeated_evictions():
+    """A request evicted after a cold dispatch (timeout or failure) and
+    re-delivered cold again must carry ONE cold penalty in its final
+    service demand, not an accumulated one per attempt."""
+    cold = 7
+    wl = "bimodal:n=250,seed=5,load=1.2|zipf:funcs=8,s=1.2"
+    servers = tuple(ServerSpec(cores=2) for _ in range(4))
+    tel = Telemetry(trace=True)
+    res = run_experiment(ExperimentSpec(
+        engine="vector", servers=servers, dispatch="sfs-aware",
+        predictor="history", workload=wl,
+        lifecycle=f"lifecycle:cold={cold},ttl=60,cap=4",
+        faults="faults:mttf=150,mttr=60,blast=2,episodes=2,seed=9",
+        retry="retry:timeout=120,retries=3,backoff=8"),
+        max_ticks=2_000_000, telemetry=tel)
+    base = run_experiment(ExperimentSpec(
+        engine="vector", servers=servers, dispatch="sfs-aware",
+        predictor="history", workload=wl), max_ticks=2_000_000)
+    # the scenario actually exercises the stacking path: some rid is
+    # delivered cold more than once
+    cold_by_rid = {}
+    for t, kind, rid, server, aux in tel.trace.canonical():
+        if kind == "cold_start":
+            cold_by_rid[rid] = cold_by_rid.get(rid, 0) + 1
+    assert max(cold_by_rid.values()) >= 2
+    # final service = base demand + at most one cold penalty
+    base_by_rid = dict(zip(base.rids.tolist(), base.service.tolist()))
+    for rid, svc in zip(res.rids.tolist(), res.service.tolist()):
+        assert svc - base_by_rid[rid] in (0, cold), rid
+
+
+# ---------------------------------------------------------------------------
+# Behavioral end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_recovered_server_reenters_dispatch_cold():
+    tel = Telemetry(trace=True)
+    res = run_experiment(ExperimentSpec(
+        engine="vector", servers=tuple(ServerSpec(cores=2)
+                                       for _ in range(4)),
+        dispatch="sfs-aware", predictor="history",
+        workload="bimodal:n=300,seed=5,load=1.2|zipf:funcs=8,s=1.2",
+        lifecycle="lifecycle:cold=3,ttl=500,cap=8",
+        faults="faults:mttf=100,mttr=30,blast=1,episodes=2,seed=5"),
+        max_ticks=2_000_000, telemetry=tel)
+    assert res.n == 300
+    tr = tel.trace.canonical()
+    recovers = [(t, s) for t, k, rid, s, _ in tr if k == "recover"]
+    assert recovers
+    # after a recovery, the server's first dispatch of any function is
+    # cold again (its warm set was dropped at failure)
+    for t_rec, srv in recovers:
+        later = [e for e in tr if e[3] == srv and e[0] > t_rec
+                 and e[1] in ("dispatch", "cold_start")]
+        if not later:
+            continue                               # idled to the end
+        first_d = next(e for e in later if e[1] == "dispatch")
+        assert any(e[1] == "cold_start" and e[2] == first_d[2]
+                   for e in later)
+
+
+def test_shedding_excluded_from_completions_and_counted():
+    tel = Telemetry(trace=True)
+    res = run_experiment(ExperimentSpec(
+        engine="vector", servers=tuple(ServerSpec(cores=2)
+                                       for _ in range(4)),
+        dispatch="sfs-aware", predictor="history",
+        workload="bimodal:n=300,seed=5,load=1.6|flash:at=50,x=6,dur=200",
+        retry="retry:timeout=200,retries=1,shed=4"),
+        max_ticks=2_000_000, telemetry=tel)
+    assert res.shed > 0
+    assert res.n + res.shed == 300
+    assert len(res.rids) == res.n                  # percentile arrays
+    shed_rids = {e[2] for e in tel.trace.canonical() if e[1] == "shed"}
+    assert len(shed_rids) == res.shed
+    assert shed_rids.isdisjoint(res.rids.tolist())
+    s = res.summary()
+    assert s["shed"] == res.shed and "timeouts" in s and "retries" in s
+
+
+def test_des_chaos_end_to_end_counts():
+    reqs = generate(FaaSBenchConfig(n_requests=1200, cores=2, load=1.6,
+                                    seed=7, n_functions=8))
+    tel = Telemetry(trace=True)
+    res = run_experiment(ExperimentSpec(
+        engine="des", servers=tuple(ServerSpec(cores=2) for _ in range(3)),
+        dispatch="sfs-aware", predictor="oracle",
+        lifecycle="lifecycle:cold=0.05",
+        faults="faults:mttf=20,mttr=8,blast=2,episodes=4,seed=4,first=5",
+        retry="retry:timeout=2,retries=2,backoff=0.5,shed=6"),
+        requests=reqs, telemetry=tel)
+    assert res.n + res.shed == 1200
+    assert res.timeouts > 0 and res.retries > 0 and res.shed > 0
+    c = tel.trace.counts()
+    assert c["fail"] == c["recover"] == 8           # 4 episodes x blast 2
+    assert c["timeout"] == res.timeouts
+    assert c["retry"] == res.retries
+    assert c["shed"] == res.shed
+    assert c["complete"] == res.n

@@ -86,3 +86,20 @@ def test_short_p99_gate_unchanged(tmp_path):
     new = [_row("a", "hash", 1.0, short_p99=12.0)]
     fails = _check(tmp_path, base, new)
     assert len(fails) == 1 and "short_p99 regression" in fails[0]
+
+
+def test_shed_count_is_a_metric_not_identity(tmp_path):
+    """Chaos rows report how many requests were shed; a different shed
+    count (and hence a different completion count behind the
+    percentiles) must still match its baseline cell — only the real
+    metric gates apply."""
+    base = [_row("chaos", "hash", 1.0, shed=40),
+            _row("chaos", "sfs-aware", 1.0, shed=55)]
+    new = [_row("chaos", "hash", 1.0, shed=47),
+           _row("chaos", "sfs-aware", 1.0, shed=31)]
+    assert _check(tmp_path, base, new) == []
+    # and a genuine p99 regression on such a row still fails
+    worse = [_row("chaos", "hash", 1.0, shed=47, short_p99=99.0),
+             _row("chaos", "sfs-aware", 1.0, shed=31)]
+    fails = _check(tmp_path, base, worse)
+    assert len(fails) == 1 and "short_p99 regression" in fails[0]

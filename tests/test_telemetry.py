@@ -232,7 +232,7 @@ def test_spec_json_round_trip_faas():
 
 
 def test_all_kinds_have_an_order():
-    assert len(KINDS) == 11 and KINDS[0] == "arrival"
+    assert len(KINDS) == 15 and KINDS[0] == "arrival"
     assert KINDS[-1] == "complete"
     # the PR 9 lifecycle kinds are first-class members of the canonical
     # order (docs/OBSERVABILITY.md): cold_start sits between dispatch
@@ -241,3 +241,11 @@ def test_all_kinds_have_an_order():
     assert KINDS.index("dispatch") < KINDS.index("cold_start") \
         < KINDS.index("admit")
     assert KINDS.index("fail") < KINDS.index("requeue")
+    # the chaos kinds (docs/OBSERVABILITY.md): shed/retry precede
+    # dispatch (admission + re-entry decisions), timeout sits with the
+    # other eviction causes, recover follows requeue
+    assert {"shed", "retry", "timeout", "recover"} <= set(KINDS)
+    assert KINDS.index("shed") < KINDS.index("retry") \
+        < KINDS.index("dispatch")
+    assert KINDS.index("timeout") < KINDS.index("fail")
+    assert KINDS.index("requeue") < KINDS.index("recover")
